@@ -1,0 +1,62 @@
+"""Shared benchmark plumbing: trace cache, timing, CSV row emission.
+
+Every benchmark emits rows ``name,us_per_call,derived`` where
+``us_per_call`` is wall-microseconds per simulated request (or per step)
+and ``derived`` is the benchmark's key metric (miss ratio, improvement,
+count, ...).  Set REPRO_BENCH_FULL=1 for the larger trace suite.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core import stats, traces
+
+FULL = os.environ.get("REPRO_BENCH_FULL", "0") == "1"
+
+# paper cache sizes (fractions of trace footprint)
+SIZE_FRACS = (0.005, 0.01, 0.05, 0.1)
+
+_TRACE_CACHE: Dict[Tuple, np.ndarray] = {}
+
+
+def suite():
+    return traces.SUITE if FULL else traces.SUITE[:4]
+
+
+def data_trace(spec) -> np.ndarray:
+    key = ("data", spec.name)
+    if key not in _TRACE_CACHE:
+        _TRACE_CACHE[key] = spec.data()
+    return _TRACE_CACHE[key]
+
+
+def meta_trace(spec) -> np.ndarray:
+    key = ("meta", spec.name)
+    if key not in _TRACE_CACHE:
+        _TRACE_CACHE[key] = traces.derive_metadata(data_trace(spec))
+    return _TRACE_CACHE[key]
+
+
+def timed_sim(policy: str, trace, cap: int, **kw):
+    t0 = time.perf_counter()
+    r = stats.simulate(policy, trace, cap, **kw)
+    dt = time.perf_counter() - t0
+    return r, 1e6 * dt / max(1, len(trace))
+
+
+def row(name: str, us: float, derived) -> str:
+    if isinstance(derived, float):
+        derived = f"{derived:.6f}"
+    return f"{name},{us:.3f},{derived}"
+
+
+def write_dirty(trace, frac: float = 0.3, seed: int = 0):
+    """Deterministic write-request marker (dirty_fn for policy.run)."""
+    rng = np.random.default_rng(seed)
+    marks = rng.random(len(trace)) < frac
+    return lambda i, key: bool(marks[i])

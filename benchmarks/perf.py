@@ -1,0 +1,116 @@
+"""Performance benchmarks: cache-hit CPU overhead (paper §1 goal), lane
+scalability of the vectorized engine, serving throughput, kernel-oracle
+throughput on CPU."""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import jax_engine as je
+from repro.core import make_policy
+from repro.core.prodcache import ProdClock2QPlus
+
+
+def perf_cpu_overhead() -> List[str]:
+    """us per access at ~100% hit ratio (the paper's low-overhead goal) and
+    under churn, python reference vs production array implementation."""
+    rows = []
+    hot = np.tile(np.arange(64), 4000)          # ~100% hits after warmup
+    rng = np.random.default_rng(0)
+    churn = rng.integers(0, 4096, 256_000)      # high miss ratio
+    for impl, mk in (("ref", lambda: make_policy("clock2q+", 1024)),
+                     ("prod", lambda: ProdClock2QPlus(1024))):
+        for wname, w in (("hot", hot), ("churn", churn)):
+            pol = mk()
+            acc = pol.access
+            t0 = time.perf_counter()
+            for k in w:
+                acc(int(k))
+            us = 1e6 * (time.perf_counter() - t0) / len(w)
+            rows.append(common.row(f"perf/cpu/{impl}/{wname}", us,
+                                   len(w)))
+    return rows
+
+
+def perf_jax_engine() -> List[str]:
+    """Vectorized-simulation throughput and lane scaling (the TPU
+    adaptation of the paper's multi-core scalability)."""
+    rows = []
+    rng = np.random.default_rng(1)
+    T = 50_000
+    for lanes in (1, 4, 8):
+        traces_np = rng.integers(0, 2048, (lanes, T)).astype(np.int32)
+        states = jax.vmap(lambda _: je.init_state("clock2q+", 256, 2048))(
+            jnp.arange(lanes))
+        tr = jnp.asarray(traces_np)
+        _, hits = je.replay_batch("clock2q+", states, tr)  # compile
+        jax.block_until_ready(hits)
+        t0 = time.perf_counter()
+        _, hits = je.replay_batch("clock2q+", states, tr)
+        jax.block_until_ready(hits)
+        dt = time.perf_counter() - t0
+        us = 1e6 * dt / (lanes * T)
+        rows.append(common.row(f"perf/jax_engine/lanes{lanes}", us,
+                               lanes * T / dt))
+    return rows
+
+
+def perf_serving() -> List[str]:
+    """Paged-serving decode throughput on the reduced model (CPU)."""
+    from repro.configs import get_config, reduced
+    from repro.models.model import build
+    from repro.serving.engine import Request, ServingEngine
+    rows = []
+    cfg = reduced(get_config("granite-3-8b"))
+    api = build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(2)
+    prefix = list(rng.integers(0, cfg.vocab, 16))
+    reqs = [Request(i, prefix + list(rng.integers(0, cfg.vocab, 8)),
+                    max_new=8) for i in range(8)]
+    eng = ServingEngine(api, params, block_size=8, hbm_blocks=48,
+                        max_batch=4)
+    t0 = time.perf_counter()
+    outs = eng.run(reqs)
+    dt = time.perf_counter() - t0
+    n_tok = sum(len(c.tokens) for c in outs)
+    stats, flows = eng.stats
+    rows.append(common.row("perf/serving/tokens_per_s",
+                           1e6 * dt / max(1, n_tok), n_tok / dt))
+    rows.append(common.row("perf/serving/prefix_hit_ratio", 0.0,
+                           stats.hit_ratio))
+    return rows
+
+
+def perf_train_step() -> List[str]:
+    """Reduced-model train-step walltime (CPU) — framework overhead check."""
+    from repro.configs import get_config, reduced
+    from repro.launch.specs import make_batch
+    from repro.models.config import ShapeCell
+    from repro.models.model import build
+    from repro.training import optim, step as step_lib
+    rows = []
+    cfg = reduced(get_config("olmo-1b"))
+    api = build(cfg)
+    oc = optim.AdamWConfig()
+    state = step_lib.init_train_state(api, jax.random.PRNGKey(0), oc)
+    step = jax.jit(step_lib.make_train_step(
+        api, step_lib.RunConfig(adamw=oc)))
+    batch = make_batch(cfg, ShapeCell("t", 64, 8, "train"), seed=1)
+    state, m = step(state, batch)            # compile
+    jax.block_until_ready(m["loss"])
+    t0 = time.perf_counter()
+    for _ in range(3):
+        state, m = step(state, batch)
+    jax.block_until_ready(m["loss"])
+    dt = (time.perf_counter() - t0) / 3
+    tokens = 64 * 8
+    rows.append(common.row("perf/train_step/reduced_olmo", 1e6 * dt,
+                           tokens / dt))
+    return rows

@@ -1,0 +1,57 @@
+"""Serve a small model with batched requests through the Clock2Q+-paged
+KV cache — the paper's technique as a serving substrate.
+
+Demonstrates: prefix-cache sharing (correlated references at admission),
+HBM pressure -> Clock2Q+ eviction to the host tier, dirty-block flushing,
+and LIVE HBM-pool resizing mid-service (paper §4.2).
+
+    PYTHONPATH=src python examples/serve_paged.py
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.models.model import build
+from repro.serving.engine import Request, ServingEngine
+
+
+def main():
+    cfg = reduced(get_config("granite-3-8b"))
+    api = build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+
+    system_prompt = list(rng.integers(0, cfg.vocab, 32))  # shared prefix
+    reqs = [Request(i, system_prompt
+                    + list(rng.integers(0, cfg.vocab,
+                                        int(rng.integers(4, 12)))),
+                    max_new=8) for i in range(8)]
+
+    eng = ServingEngine(api, params, block_size=8, hbm_blocks=28,
+                        max_batch=4)
+    t0 = time.time()
+    done = eng.run(reqs[:4])
+    stats, flows = eng.stats
+    print(f"phase 1: {len(done)} completions in {time.time()-t0:.1f}s")
+    print(f"  pool: hits={stats.hits} misses={stats.misses} "
+          f"hit_ratio={stats.hit_ratio:.2f} swap_out={stats.swap_out} "
+          f"swap_in={stats.swap_in}")
+    print(f"  clock2q+ flows: {flows}")
+
+    print("live-shrinking the HBM pool 28 -> 14 blocks (paper §4.2) ...")
+    eng.pool.resize(14)
+    done2 = eng.run(reqs[4:])
+    stats, flows = eng.stats
+    print(f"phase 2 (half HBM): {len(done2)} completions")
+    print(f"  pool: hits={stats.hits} misses={stats.misses} "
+          f"hit_ratio={stats.hit_ratio:.2f} swap_out={stats.swap_out} "
+          f"swap_in={stats.swap_in}")
+    sample = done[0]
+    print(f"sample completion req{sample.req_id}: {sample.tokens}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Clock2Q+ cache substrate — the paper's contribution.
+
+Reference policy zoo (pure Python, the correctness oracles), trace
+generation/derivation, the vectorized JAX simulation engine, and the
+production-style array implementation with live resizing.
+"""
+
+from repro.core.policy import (  # noqa: F401
+    CachePolicy, SimResult, make_policy, policy_names, register,
+)
+import repro.core.policies  # noqa: F401  (registers the zoo)
+from repro.core import stats, traces  # noqa: F401

@@ -1,0 +1,8 @@
+from repro.core.policies.simple import FIFO, LRU, Clock, SLRU, LFU, SIEVE  # noqa: F401
+from repro.core.policies.two_q import TwoQ, Clock2Q  # noqa: F401
+from repro.core.policies.s3fifo import S3FIFO  # noqa: F401
+from repro.core.policies.clock2qplus import Clock2QPlus  # noqa: F401
+from repro.core.policies.arc import ARC  # noqa: F401
+from repro.core.policies.tinylfu import WTinyLFU  # noqa: F401
+from repro.core.policies.belady import Belady  # noqa: F401
+from repro.core.policies.lirs import LIRS  # noqa: F401

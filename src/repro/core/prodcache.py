@@ -1,0 +1,483 @@
+"""Production-style Clock2Q+ (paper §4) — the array-based implementation.
+
+Faithful to the vSAN engineering design, adapted from kernel C to a
+host-side Python/NumPy runtime (this structure runs on the *host* CPU of a
+TPU serving stack, where it allocates HBM KV blocks — see repro.kvcache):
+
+  * No allocation after init: every queue is a contiguous array
+    preallocated to its maximum (resizable) size (§4.1, §4.2.1 "reserved
+    virtual address space").
+  * Chained hash tables stored as arrays (bucket heads + per-entry next
+    pointers), one for resident entries and one for the Ghost ring (§4.1).
+  * "Always-full" queues with a single cursor for the Small FIFO / Ghost
+    ring and a clock hand for the Main Clock (§4.1.1): eviction candidates
+    are found by advancing the cursor; dirty/pinned entries are skipped in
+    place (the paper's "equivalent to reinserting at the head"), with a
+    bounded scan that falls back to the Main Clock (§4.1.3, §5.5.1).
+  * Entries being filled are marked DOING-IO (§4.1.1); completion via
+    ``io_done``.
+  * Live resizing (§4.2): logical capacities move within the preallocated
+    maxima; the hash table is rehashed *incrementally* (``resize_step``),
+    lookups consult only the new bucket array, and the insertion path
+    detects+migrates strays from the old one — the paper's protocol.
+
+Semantics (hit/miss/eviction sequence) are identical to
+``repro.core.policies.clock2qplus.Clock2QPlus`` with ``dirty_mode=
+"simplified"`` when no pinning/resizing is used; a property test asserts
+exact parity.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+EMPTY = -1
+_WHERE_NONE, _WHERE_SMALL, _WHERE_MAIN = 0, 1, 2
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(1, (n - 1).bit_length())
+
+
+@dataclasses.dataclass
+class AccessResult:
+    hit: bool
+    block: int                 # payload handle for the key (>=0) or EMPTY
+    evicted_key: int = EMPTY   # resident key whose payload was dropped
+    evicted_block: int = EMPTY
+    bypassed_to_main: bool = False
+    io_pending: bool = False   # True when the caller must fill the block
+
+
+class ProdClock2QPlus:
+    """Array-based Clock2Q+ with pinning, dirty blocks, and live resizing."""
+
+    def __init__(self, capacity: int, *, small_frac: float = 0.1,
+                 ghost_frac: float = 0.5, window_frac: float = 0.5,
+                 skip_limit=None, dirty_scan_limit: int = 16,
+                 max_capacity: int = 0, track_io: bool = False):
+        self.track_io = track_io  # mark entries DOING-IO until io_done()
+        self.max_capacity = max(capacity, max_capacity or capacity)
+        self._small_frac = small_frac
+        self._ghost_frac = ghost_frac
+        self._window_frac = window_frac
+        self.skip_limit = skip_limit
+        self.dirty_scan_limit = dirty_scan_limit
+
+        ms = max(1, int(round(self.max_capacity * small_frac)))
+        mm = max(1, self.max_capacity - ms)
+        mg = max(1, int(round(self.max_capacity * ghost_frac)))
+        self.max_small, self.max_main, self.max_ghost = ms, mm, mg
+        n_ent = ms + mm
+
+        # entry arrays (small ids: [0, ms), main ids: [ms, ms+mm))
+        self.key = np.full(n_ent, EMPTY, dtype=np.int64)
+        self.ref = np.zeros(n_ent, dtype=bool)
+        self.dirty = np.zeros(n_ent, dtype=bool)
+        self.pin = np.zeros(n_ent, dtype=np.int32)
+        self.io = np.zeros(n_ent, dtype=bool)
+        self.block = np.full(n_ent, EMPTY, dtype=np.int64)
+        self.seq = np.zeros(n_ent, dtype=np.int64)  # small insertion seq
+
+        # resident hash: new + old bucket arrays for the resize protocol
+        # (sized for the LOGICAL capacity; resize swaps in a new array)
+        sc0 = max(1, min(ms, int(round(capacity * small_frac))))
+        self.n_buckets = _next_pow2(2 * (sc0 + max(1, capacity - sc0)))
+        self.buckets = np.full(self.n_buckets, EMPTY, dtype=np.int64)
+        self.nxt = np.full(n_ent, EMPTY, dtype=np.int64)
+        self.old_buckets: np.ndarray | None = None
+        self.old_n_buckets = 0
+        self._rehash_cursor = 0
+
+        # ghost ring + its hash
+        self.gkey = np.full(mg, EMPTY, dtype=np.int64)
+        self.g_n_buckets = _next_pow2(2 * mg)
+        self.gbuckets = np.full(self.g_n_buckets, EMPTY, dtype=np.int64)
+        self.gnxt = np.full(mg, EMPTY, dtype=np.int64)
+        self.gpos = 0
+
+        # payload free list (stack)
+        self.free_blocks = list(range(n_ent - 1, -1, -1))
+
+        # cursors / logical sizes
+        self.spos = 0
+        self.hand = 0
+        self.small_seq = 0
+        self.set_capacity(capacity)
+
+        # stats
+        self.hits = 0
+        self.misses = 0
+        self.io_waits = 0
+        self.flows = {"small_to_main": 0, "small_to_ghost": 0,
+                      "ghost_to_main": 0, "evict_main": 0, "small_bypass": 0}
+
+    # -- sizing ---------------------------------------------------------------
+    def set_capacity(self, capacity: int) -> None:
+        """Set the logical capacity (grow or shrink target). Shrinking may
+        leave entries beyond the boundary; drain with ``shrink_step``."""
+        if not (1 <= capacity <= self.max_capacity):
+            raise ValueError(f"capacity {capacity} not in [1, {self.max_capacity}]")
+        self.capacity = capacity
+        sc = max(1, min(self.max_small, int(round(capacity * self._small_frac))))
+        self.small_cap = sc
+        self.main_cap = max(1, min(self.max_main, capacity - sc))
+        self.ghost_cap = max(1, min(self.max_ghost,
+                                    int(round(capacity * self._ghost_frac))))
+        self.window = int(round(self._window_frac * sc))
+        self.spos %= self.small_cap
+        self.hand %= self.main_cap
+        if self.gpos >= self.ghost_cap:
+            self.gpos = 0
+
+    # -- hashing ---------------------------------------------------------------
+    def _h(self, key: int, n_buckets: int) -> int:
+        x = (key * 0x9E3779B97F4A7C15) & 0xFFFFFFFFFFFFFFFF
+        return (x >> 17) % n_buckets
+
+    def _hash_insert(self, eid: int) -> None:
+        b = self._h(int(self.key[eid]), self.n_buckets)
+        self.nxt[eid] = self.buckets[b]
+        self.buckets[b] = eid
+
+    def _hash_remove(self, eid: int) -> None:
+        key = int(self.key[eid])
+        for buckets, nb in ((self.buckets, self.n_buckets),
+                            (self.old_buckets, self.old_n_buckets)):
+            if buckets is None:
+                continue
+            b = self._h(key, nb)
+            cur = int(buckets[b])
+            prev = EMPTY
+            while cur != EMPTY:
+                if cur == eid:
+                    if prev == EMPTY:
+                        buckets[b] = self.nxt[cur]
+                    else:
+                        self.nxt[prev] = self.nxt[cur]
+                    self.nxt[cur] = EMPTY
+                    return
+                prev, cur = cur, int(self.nxt[cur])
+
+    def _hash_lookup(self, key: int) -> int:
+        """Search the NEW bucket array only (paper §4.2.1)."""
+        cur = int(self.buckets[self._h(key, self.n_buckets)])
+        while cur != EMPTY:
+            if int(self.key[cur]) == key:
+                return cur
+            cur = int(self.nxt[cur])
+        return EMPTY
+
+    def _find_stray(self, key: int) -> int:
+        """Insertion-path check of the OLD bucket array; migrate on hit."""
+        if self.old_buckets is None:
+            return EMPTY
+        b = self._h(key, self.old_n_buckets)
+        cur = int(self.old_buckets[b])
+        prev = EMPTY
+        while cur != EMPTY:
+            if int(self.key[cur]) == key:
+                if prev == EMPTY:
+                    self.old_buckets[b] = self.nxt[cur]
+                else:
+                    self.nxt[prev] = self.nxt[cur]
+                self.nxt[cur] = EMPTY
+                self._hash_insert(cur)
+                return cur
+            prev, cur = cur, int(self.nxt[cur])
+        return EMPTY
+
+    # -- ghost ring -------------------------------------------------------------
+    def _ghash(self, key: int) -> int:
+        return self._h(key, self.g_n_buckets)
+
+    def _ghost_lookup(self, key: int) -> int:
+        cur = int(self.gbuckets[self._ghash(key)])
+        while cur != EMPTY:
+            if int(self.gkey[cur]) == key:
+                return cur
+            cur = int(self.gnxt[cur])
+        return EMPTY
+
+    def _ghost_remove_slot(self, slot: int) -> None:
+        key = int(self.gkey[slot])
+        b = self._ghash(key)
+        cur = int(self.gbuckets[b])
+        prev = EMPTY
+        while cur != EMPTY:
+            if cur == slot:
+                if prev == EMPTY:
+                    self.gbuckets[b] = self.gnxt[cur]
+                else:
+                    self.gnxt[prev] = self.gnxt[cur]
+                break
+            prev, cur = cur, int(self.gnxt[cur])
+        self.gkey[slot] = EMPTY
+        self.gnxt[slot] = EMPTY
+
+    def _ghost_push(self, key: int) -> None:
+        slot = self.gpos
+        if int(self.gkey[slot]) != EMPTY:
+            self._ghost_remove_slot(slot)
+        self.gkey[slot] = key
+        b = self._ghash(key)
+        self.gnxt[slot] = self.gbuckets[b]
+        self.gbuckets[b] = slot
+        self.gpos = (self.gpos + 1) % self.ghost_cap
+
+    # -- eviction ----------------------------------------------------------------
+    def _evict_main_slot(self) -> int:
+        """Advance the clock hand to a victim main slot; frees it. Returns
+        the local main slot index."""
+        skips = 0
+        scanned_dirty = 0
+        forced = False
+        while True:
+            s = self.hand
+            self.hand = (self.hand + 1) % self.main_cap
+            eid = self.max_small + s
+            if int(self.key[eid]) == EMPTY:
+                return s  # pre-warm / invalid slot: free for the taking
+            if self.pin[eid] or self.io[eid]:
+                continue
+            if self.dirty[eid]:
+                scanned_dirty += 1
+                if scanned_dirty > self.dirty_scan_limit:
+                    self.dirty[eid] = False  # synchronous flush fallback
+                continue
+            if self.ref[eid] and not forced:
+                self.ref[eid] = False
+                skips += 1
+                if self.skip_limit is not None and skips >= self.skip_limit:
+                    forced = True
+                continue
+            # victim
+            self._hash_remove(eid)
+            self.flows["evict_main"] += 1
+            self._last_evicted = (int(self.key[eid]), int(self.block[eid]))
+            self.free_blocks.append(int(self.block[eid]))
+            self.key[eid] = EMPTY
+            self.block[eid] = EMPTY
+            self.ref[eid] = False
+            return s
+
+    def _insert_main(self, key: int, block: int | None, dirty: bool,
+                     io: bool) -> int:
+        """Insert into the Main Clock; ``block=None`` allocates a payload
+        handle AFTER the eviction has freed one."""
+        s = self._evict_main_slot()
+        if block is None:
+            block = self.free_blocks.pop()
+        eid = self.max_small + s
+        self.key[eid] = key
+        self.block[eid] = block
+        self.ref[eid] = False
+        self.dirty[eid] = dirty
+        self.io[eid] = io
+        self.pin[eid] = 0
+        self._hash_insert(eid)
+        return eid
+
+    def _evict_small_slot(self):
+        """Advance the small cursor to a free slot, promoting/demoting the
+        displaced entries.  Returns slot or -1 (all-dirty bypass, §5.5.1)."""
+        scanned = 0
+        while True:
+            s = self.spos
+            self.spos = (self.spos + 1) % self.small_cap
+            if int(self.key[s]) == EMPTY:
+                return s
+            if self.pin[s] or self.io[s] or self.dirty[s]:
+                scanned += 1  # skipped in place == reinsert at head (§4.1.3)
+                if scanned >= min(self.dirty_scan_limit, self.small_cap):
+                    return -1
+                continue
+            key, block = int(self.key[s]), int(self.block[s])
+            self._hash_remove(s)
+            self.key[s] = EMPTY
+            if self.ref[s]:
+                self.flows["small_to_main"] += 1
+                self._insert_main(key, block, dirty=False, io=False)
+            else:
+                self.flows["small_to_ghost"] += 1
+                self._ghost_push(key)
+                self.free_blocks.append(block)
+                self._last_evicted = (key, block)
+            self.ref[s] = False
+            return s
+
+    # -- public ------------------------------------------------------------------
+    def access(self, key: int, dirty: bool = False, pin: bool = False) -> AccessResult:
+        """Look up ``key``; on miss, admit it (Clock2Q+ placement) and return
+        a payload handle the caller must fill (``io_pending=True``)."""
+        self._last_evicted = (EMPTY, EMPTY)
+        eid = self._hash_lookup(key)
+        if eid == EMPTY:
+            eid = self._find_stray(key)  # resize protocol: check old location
+        if eid != EMPTY:
+            self.hits += 1
+            if eid < self.max_small:  # small FIFO hit: correlation window
+                if self.small_seq - int(self.seq[eid]) >= self.window:
+                    self.ref[eid] = True
+            else:
+                self.ref[eid] = True
+            if dirty:
+                self.dirty[eid] = True
+            if pin:
+                self.pin[eid] += 1
+            if self.io[eid]:
+                self.io_waits += 1
+            return AccessResult(True, int(self.block[eid]),
+                                io_pending=bool(self.io[eid]))
+
+        self.misses += 1
+        gslot = self._ghost_lookup(key)
+        bypass = False
+        if gslot != EMPTY:
+            self._ghost_remove_slot(gslot)
+            self.flows["ghost_to_main"] += 1
+            eid = self._insert_main(key, None, dirty=dirty, io=self.track_io)
+            block = int(self.block[eid])
+        else:
+            s = self._evict_small_slot()
+            if s < 0:
+                self.flows["small_bypass"] += 1
+                bypass = True
+                eid = self._insert_main(key, None, dirty=dirty, io=self.track_io)
+                block = int(self.block[eid])
+            else:
+                block = self.free_blocks.pop()
+                eid = s
+                self.key[s] = key
+                self.block[s] = block
+                self.ref[s] = False
+                self.dirty[s] = dirty
+                self.io[s] = self.track_io
+                self.pin[s] = 0
+                self.seq[s] = self.small_seq
+                self.small_seq += 1
+                self._hash_insert(s)
+        if pin:
+            self.pin[eid] += 1
+        ek, eb = self._last_evicted
+        return AccessResult(False, block, evicted_key=ek, evicted_block=eb,
+                            bypassed_to_main=bypass, io_pending=True)
+
+    def io_done(self, key: int) -> None:
+        eid = self._hash_lookup(key)
+        if eid == EMPTY:
+            eid = self._find_stray(key)
+        if eid != EMPTY:
+            self.io[eid] = False
+
+    def unpin(self, key: int) -> None:
+        eid = self._hash_lookup(key)
+        if eid == EMPTY:
+            eid = self._find_stray(key)
+        if eid != EMPTY and self.pin[eid] > 0:
+            self.pin[eid] -= 1
+
+    def clean(self, key: int) -> None:
+        """Mark a dirty block flushed (host copy completed)."""
+        eid = self._hash_lookup(key)
+        if eid == EMPTY:
+            eid = self._find_stray(key)
+        if eid != EMPTY:
+            self.dirty[eid] = False
+
+    def set_dirty(self, key: int) -> None:
+        """Mark resident block dirty without touching replacement state."""
+        eid = self._hash_lookup(key)
+        if eid == EMPTY:
+            eid = self._find_stray(key)
+        if eid != EMPTY:
+            self.dirty[eid] = True
+
+    def contains(self, key: int) -> bool:
+        return self._hash_lookup(key) != EMPTY or self._find_stray(key) != EMPTY
+
+    def __len__(self) -> int:
+        return int(np.sum(self.key != EMPTY))
+
+    def dirty_keys(self):
+        mask = (self.key != EMPTY) & self.dirty
+        return [int(k) for k in self.key[mask]]
+
+    # -- live resizing (§4.2) -----------------------------------------------------
+    def begin_resize(self, new_capacity: int) -> None:
+        """Start a live resize: swap in a right-sized bucket array and let
+        ``resize_step`` migrate entries in the background."""
+        old_caps = (self.small_cap, self.main_cap)
+        self.set_capacity(new_capacity)
+        n_new = _next_pow2(2 * (self.small_cap + self.main_cap))
+        if n_new != self.n_buckets:
+            self.old_buckets = self.buckets
+            self.old_n_buckets = self.n_buckets
+            self.buckets = np.full(n_new, EMPTY, dtype=np.int64)
+            self.n_buckets = n_new
+            self._rehash_cursor = 0
+        self._shrink_pending = (old_caps[0] > self.small_cap
+                                or old_caps[1] > self.main_cap)
+
+    def resize_step(self, n_entries: int = 64) -> bool:
+        """Background-thread analogue: migrate up to ``n_entries`` from the
+        old hash location and drain out-of-bounds slots.  Returns True when
+        the resize is complete."""
+        done_hash = True
+        if self.old_buckets is not None:
+            moved = 0
+            while self._rehash_cursor < self.old_n_buckets and moved < n_entries:
+                b = self._rehash_cursor
+                cur = int(self.old_buckets[b])
+                while cur != EMPTY and moved < n_entries:
+                    nxt = int(self.nxt[cur])
+                    self.old_buckets[b] = nxt
+                    self._hash_insert(cur)
+                    cur = nxt
+                    moved += 1
+                if cur == EMPTY:
+                    self._rehash_cursor += 1
+            if self._rehash_cursor >= self.old_n_buckets:
+                self.old_buckets = None
+                self.old_n_buckets = 0
+            else:
+                done_hash = False
+        done_drain = self._drain_out_of_bounds(n_entries)
+        return done_hash and done_drain
+
+    def _drain_out_of_bounds(self, budget: int) -> bool:
+        """Evict entries living beyond the shrunken logical capacities.
+        Dirty blocks are flushed (cleaned) first, as §4.2.2 prescribes."""
+        done = True
+        for eid in range(self.small_cap, self.max_small):
+            if budget <= 0:
+                return False
+            if int(self.key[eid]) != EMPTY:
+                if self.pin[eid] or self.io[eid]:
+                    done = False
+                    continue
+                if self.dirty[eid]:
+                    self.dirty[eid] = False  # trigger transaction flush
+                key, block = int(self.key[eid]), int(self.block[eid])
+                self._hash_remove(eid)
+                self._ghost_push(key)
+                self.free_blocks.append(block)
+                self.key[eid] = EMPTY
+                budget -= 1
+        for s in range(self.main_cap, self.max_main):
+            eid = self.max_small + s
+            if budget <= 0:
+                return False
+            if int(self.key[eid]) != EMPTY:
+                if self.pin[eid] or self.io[eid]:
+                    done = False
+                    continue
+                if self.dirty[eid]:
+                    self.dirty[eid] = False
+                self._hash_remove(eid)
+                self.free_blocks.append(int(self.block[eid]))
+                self.key[eid] = EMPTY
+                budget -= 1
+        return done

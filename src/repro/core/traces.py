@@ -1,0 +1,241 @@
+"""Synthetic trace generation + metadata-trace derivation (paper §2.3, §5.1).
+
+The CloudPhysics/Wikimedia/Meta/Tencent datasets are not available offline,
+so the benchmarks run on seeded synthetic traces that reproduce the access-
+pattern *classes* the paper's analysis relies on:
+
+  * ``storage_data_trace`` — block (LBN) traces: Zipf-popular region +
+    sequential runs + uniform cold traffic + working-set drift + periodic
+    scans, optionally filtered through an upper-tier LRU (paper §2.2: the
+    upper file system's own cache removes temporal locality before requests
+    reach the lower layer).
+  * ``derive_metadata`` — LBN // fanout (paper §2.3; fanout 200 = vSAN ESA).
+  * ``object_trace`` — skewed key-value/object workloads with churn, for the
+    non-block evaluation (Fig. 14).
+
+All generators are pure functions of their seed.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass
+
+import numpy as np
+
+DEFAULT_FANOUT = 200
+
+
+def _zipf_cdf(universe: int, alpha: float) -> np.ndarray:
+    ranks = np.arange(1, universe + 1, dtype=np.float64)
+    w = ranks ** (-alpha)
+    return np.cumsum(w) / np.sum(w)
+
+
+def zipf_trace(n: int, universe: int, alpha: float = 1.0, seed: int = 0,
+               permute: bool = True) -> np.ndarray:
+    """Zipf(alpha) over ``universe`` ids; ranks scattered over the id space."""
+    rng = np.random.default_rng(seed)
+    cdf = _zipf_cdf(universe, alpha)
+    ranks = np.searchsorted(cdf, rng.random(n))
+    if permute:
+        perm = rng.permutation(universe)
+        return perm[ranks].astype(np.int64)
+    return ranks.astype(np.int64)
+
+
+def upper_tier_filter(trace: np.ndarray, cache_size: int) -> np.ndarray:
+    """Replay through an LRU of ``cache_size`` and return only the misses —
+    models the upper file system's data cache (paper §2.2)."""
+    od: OrderedDict = OrderedDict()
+    out = []
+    for k in trace.tolist():
+        if k in od:
+            od.move_to_end(k)
+            continue
+        if len(od) >= cache_size:
+            od.popitem(last=False)
+        od[k] = None
+        out.append(k)
+    return np.asarray(out, dtype=np.int64)
+
+
+def storage_data_trace(n: int, universe: int = 1 << 21, seed: int = 0,
+                       zipf_alpha: float = 1.1, n_files: int = 4096,
+                       frac_seq_in_file: float = 0.6, mean_run: int = 48,
+                       frac_cold: float = 0.05, scan_every: int = 0,
+                       scan_len: int = 0, drift_epochs: int = 0,
+                       upper_cache_frac: float = 0.0,
+                       frac_rmw: float = 0.15, rmw_gap: int = 12) -> np.ndarray:
+    """Composite production-like LBN trace.
+
+    The LBN space is carved into ``n_files`` extents with lognormal sizes;
+    file popularity is Zipf(``zipf_alpha``).  Requests to a file are either
+    sequential runs (geometric length) or uniform-random within the file.
+    This preserves *spatial* locality (hot files -> hot extents), which is
+    what makes the derived metadata trace realistic: hot leaves stay hot
+    long-term, while sequential runs create short correlated-reference
+    bursts on consecutive leaves (paper §2.2).
+    """
+    rng = np.random.default_rng(seed)
+    # -- carve the LBN space into files --------------------------------------
+    raw = rng.lognormal(mean=5.0, sigma=1.6, size=n_files)
+    sizes = np.maximum(4, (raw / raw.sum() * universe)).astype(np.int64)
+    starts = np.concatenate([[0], np.cumsum(sizes)[:-1]])
+    starts = np.minimum(starts, universe - 1)
+    sizes = np.minimum(sizes, universe - starts)
+    cdf = _zipf_cdf(n_files, zipf_alpha)
+    rank_to_file = rng.permutation(n_files)
+    epoch_len = max(1, n // max(1, drift_epochs)) if drift_epochs else n + 1
+    # -- emit ------------------------------------------------------------------
+    pieces = []
+    emitted = 0
+    while emitted < n:
+        drift = ((emitted // epoch_len) * 1009) if drift_epochs else 0
+        r = rng.random()
+        if r < frac_cold:  # uniform cold block anywhere on the volume
+            pieces.append(np.asarray([rng.integers(0, universe)], dtype=np.int64))
+            emitted += 1
+            continue
+        rank = int(np.searchsorted(cdf, rng.random()))
+        f = int(rank_to_file[(rank + drift) % n_files])
+        base, fsz = int(starts[f]), int(sizes[f])
+        if rng.random() < frac_seq_in_file:  # sequential run within the file
+            run = min(1 + int(rng.geometric(1.0 / mean_run)), fsz, n - emitted)
+            off = int(rng.integers(0, max(1, fsz - run + 1)))
+            pieces.append(base + np.arange(off, off + run, dtype=np.int64))
+            emitted += run
+        else:  # random block within the file
+            pieces.append(np.asarray([base + rng.integers(0, fsz)], dtype=np.int64))
+            emitted += 1
+    out = np.concatenate(pieces)[:n]
+    if scan_every and scan_len:
+        pieces = []
+        for j in range(0, n, scan_every):
+            pieces.append(out[j:j + scan_every])
+            start = int(rng.integers(0, max(1, universe - scan_len)))
+            pieces.append(np.arange(start, start + scan_len, dtype=np.int64))
+        out = np.concatenate(pieces)[:n + (n // scan_every) * scan_len]
+    if upper_cache_frac > 0:
+        out = upper_tier_filter(out, max(1, int(upper_cache_frac * universe)))
+    if frac_rmw > 0:
+        out = _inject_rmw(out, frac_rmw, rmw_gap, rng)
+    return out
+
+
+def _inject_rmw(trace: np.ndarray, frac: float, gap: int, rng) -> np.ndarray:
+    """Read-modify-write injection: with prob ``frac`` a request is repeated
+    once a few requests later (partial-block write / flush-readback).  These
+    are data-level correlated references (paper §5.3 conjectures real data
+    traces contain them)."""
+    import heapq
+    dup = rng.random(trace.size) < frac
+    gaps = rng.integers(1, gap + 1, size=trace.size)
+    out = []
+    pending = []  # (due input index, key)
+    for i, k in enumerate(trace.tolist()):
+        while pending and pending[0][0] <= i:
+            out.append(heapq.heappop(pending)[1])
+        out.append(k)
+        if dup[i]:
+            heapq.heappush(pending, (i + int(gaps[i]), k))
+    out.extend(k for _, k in sorted(pending))
+    return np.asarray(out, dtype=np.int64)
+
+
+def derive_metadata(trace: np.ndarray, fanout: int = DEFAULT_FANOUT) -> np.ndarray:
+    """Paper §2.3: metadata block id = LBN // fanout."""
+    return (np.asarray(trace, dtype=np.int64) // fanout)
+
+
+def object_trace(n: int, universe: int = 1 << 17, alpha: float = 1.2,
+                 churn_frac: float = 0.1, seed: int = 0) -> np.ndarray:
+    """Skewed object/key-value workload with arrival churn (Fig. 14 class)."""
+    rng = np.random.default_rng(seed)
+    base = zipf_trace(n, universe, alpha=alpha, seed=seed + 1)
+    churn_mask = rng.random(n) < churn_frac
+    # churned requests address a moving window of 'new' objects
+    new_ids = universe + (np.arange(n) // max(1, n // universe))
+    base[churn_mask] = new_ids[churn_mask]
+    return base
+
+
+def correlated_burst_trace(n_ops: int, universe: int = 1 << 16,
+                           alpha: float = 0.8, burst_max: int = 4,
+                           burst_window: int = 8, seed: int = 0) -> np.ndarray:
+    """Explicit correlated-reference generator: every logical op touches its
+    block 1..burst_max times within a short window (multiple tuples read
+    from one metadata leaf), independent of the block's long-term heat."""
+    rng = np.random.default_rng(seed)
+    blocks = zipf_trace(n_ops, universe, alpha=alpha, seed=seed + 7)
+    out = []
+    pending = []  # (emit_at, key)
+    t = 0
+    for b in blocks.tolist():
+        reps = int(rng.integers(1, burst_max + 1))
+        out.append(b)
+        t += 1
+        for _ in range(reps - 1):
+            pending.append((t + int(rng.integers(1, burst_window)), b))
+        pending.sort()
+        while pending and pending[0][0] <= t:
+            out.append(pending.pop(0)[1])
+            t += 1
+    out.extend(k for _, k in pending)
+    return np.asarray(out, dtype=np.int64)
+
+
+@dataclass(frozen=True)
+class TraceSpec:
+    """Named, seeded workload used across benchmarks (a stand-in for one
+    CloudPhysics trace)."""
+    name: str
+    n: int
+    universe: int
+    seed: int
+    zipf_alpha: float = 1.1
+    n_files: int = 4096
+    frac_seq_in_file: float = 0.6
+    mean_run: int = 48
+    frac_cold: float = 0.05
+    scan_every: int = 0
+    scan_len: int = 0
+    drift_epochs: int = 0
+    upper_cache_frac: float = 0.0
+
+    def data(self) -> np.ndarray:
+        return storage_data_trace(
+            self.n, self.universe, seed=self.seed, zipf_alpha=self.zipf_alpha,
+            n_files=self.n_files, frac_seq_in_file=self.frac_seq_in_file,
+            mean_run=self.mean_run, frac_cold=self.frac_cold,
+            scan_every=self.scan_every, scan_len=self.scan_len,
+            drift_epochs=self.drift_epochs,
+            upper_cache_frac=self.upper_cache_frac)
+
+    def metadata(self, fanout: int = DEFAULT_FANOUT) -> np.ndarray:
+        return derive_metadata(self.data(), fanout)
+
+
+# The benchmark suite: a spread of skews / scan intensities / localities /
+# run lengths, mirroring the diversity of the 106 CloudPhysics traces at
+# reduced scale.
+SUITE = [
+    TraceSpec("w01-skewed", n=400_000, universe=1 << 21, seed=101, zipf_alpha=1.3),
+    TraceSpec("w02-balanced", n=400_000, universe=1 << 21, seed=202, zipf_alpha=1.0),
+    TraceSpec("w03-seqheavy", n=400_000, universe=1 << 21, seed=303,
+              zipf_alpha=0.9, frac_seq_in_file=0.85, mean_run=128),
+    TraceSpec("w04-scans", n=400_000, universe=1 << 21, seed=404,
+              zipf_alpha=1.1, scan_every=50_000, scan_len=20_000),
+    TraceSpec("w05-filtered", n=400_000, universe=1 << 20, seed=505,
+              zipf_alpha=1.2, upper_cache_frac=0.01),
+    TraceSpec("w06-flat", n=400_000, universe=1 << 20, seed=606,
+              zipf_alpha=0.7, frac_seq_in_file=0.4, mean_run=24),
+    TraceSpec("w07-drift", n=400_000, universe=1 << 21, seed=707,
+              zipf_alpha=1.1, drift_epochs=5),
+    TraceSpec("w08-random", n=400_000, universe=1 << 20, seed=808,
+              zipf_alpha=1.0, frac_seq_in_file=0.15, frac_cold=0.15),
+]
+
+
+def footprint(trace: np.ndarray) -> int:
+    return int(np.unique(np.asarray(trace)).size)

@@ -1,0 +1,27 @@
+"""Oracle for the cache_sim kernel: the location-table JAX engine
+(repro.core.jax_engine), itself bit-verified against the pure-Python
+reference zoo."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import jax_engine as je
+
+
+def cache_sim_ref(traces: np.ndarray, capacity: int, *,
+                  window_frac: float = 0.5, small_frac: float = 0.1,
+                  ghost_frac: float = 0.5):
+    """traces: (LANES, T) -> hits (LANES, T) bool."""
+    traces = np.asarray(traces)
+    universe = int(traces.max()) + 1
+    out = []
+    for lane in traces:
+        st = je.init_state("clock2q+", capacity, universe,
+                           small_frac=small_frac, ghost_frac=ghost_frac,
+                           window_frac=window_frac)
+        _, hits = je.replay("clock2q+", st, jnp.asarray(lane, jnp.int32))
+        out.append(np.asarray(hits))
+    return np.stack(out)

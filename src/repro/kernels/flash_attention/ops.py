@@ -1,0 +1,40 @@
+"""jit'd public wrapper: (B, S, H, hd) GQA attention via the Pallas flash
+kernel, with head-dim padding to the 128-lane MXU boundary and KV-head
+repetition for grouped queries."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_bh
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q",
+                                             "block_kv", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_kv: int = 128, interpret: bool = False):
+    """q: (B, Sq, H, hd); k/v: (B, Skv, Hkv, hd) -> (B, Sq, H, hd)."""
+    B, Sq, H, hd = q.shape
+    Hkv = k.shape[2]
+    if H != Hkv:
+        rep = H // Hkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    pad = (-hd) % 128
+    if pad:
+        q = jnp.pad(q, [(0, 0), (0, 0), (0, 0), (0, pad)])
+        k = jnp.pad(k, [(0, 0), (0, 0), (0, 0), (0, pad)])
+        v = jnp.pad(v, [(0, 0), (0, 0), (0, 0), (0, pad)])
+    # scale uses the PADDED dim inside the kernel; compensate so softmax
+    # temperature matches the true head_dim.
+    scale_fix = ((hd + pad) / hd) ** 0.5
+    qb = (q * scale_fix).transpose(0, 2, 1, 3).reshape(B * H, Sq, hd + pad)
+    kb = k.transpose(0, 2, 1, 3).reshape(B * H, -1, hd + pad)
+    vb = v.transpose(0, 2, 1, 3).reshape(B * H, -1, hd + pad)
+    o = flash_attention_bh(qb, kb, vb, causal=causal, block_q=block_q,
+                           block_kv=block_kv, interpret=interpret)
+    o = o.reshape(B, H, Sq, hd + pad).transpose(0, 2, 1, 3)
+    return o[..., :hd]

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for flash attention (exact softmax)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True):
+    """q/k/v: (BH, S, d)."""
+    d = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (d ** 0.5)
+    if causal:
+        Sq, Skv = q.shape[1], k.shape[1]
+        qpos = jax.lax.broadcasted_iota(jnp.int32, (Sq, Skv), 0)
+        kpos = jax.lax.broadcasted_iota(jnp.int32, (Sq, Skv), 1)
+        s = jnp.where((kpos <= qpos)[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

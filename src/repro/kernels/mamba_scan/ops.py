@@ -1,0 +1,17 @@
+"""jit'd public wrapper for the selective-scan kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.mamba_scan.mamba_scan import mamba_scan_raw
+
+
+@functools.partial(jax.jit, static_argnames=("d_block", "chunk",
+                                             "interpret"))
+def mamba_scan(u, dt, Bc, Cc, A_log, *, d_block: int = 512,
+               chunk: int = 64, interpret: bool = False):
+    return mamba_scan_raw(u, dt, Bc, Cc, A_log, d_block=d_block,
+                          chunk=chunk, interpret=interpret)

@@ -1,0 +1,18 @@
+"""jit'd public wrapper for the paged-attention decode kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.paged_attention.paged_attention import paged_attention_raw
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q, kpool, vpool, block_tables, lengths, *,
+                    interpret: bool = False):
+    """q: (B, H, d); kpool/vpool: (N, bs, Hkv, d); block_tables: (B, nb)
+    int32; lengths: (B,) int32 -> (B, H, d)."""
+    return paged_attention_raw(q, kpool, vpool, block_tables, lengths,
+                               interpret=interpret)

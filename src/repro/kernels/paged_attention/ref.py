@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for paged-attention decode: gather blocks through the
+block table, mask by length, exact softmax (mirrors
+repro.models.transformer.forward_decode_paged semantics)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def paged_attention_ref(q, kpool, vpool, block_tables, lengths):
+    """q: (B, H, d); kpool/vpool: (N, bs, Hkv, d); block_tables: (B, nb);
+    lengths: (B,) -> (B, H, d)."""
+    B, H, d = q.shape
+    _, bs, Hkv, _ = kpool.shape
+    k = kpool[block_tables].reshape(B, -1, Hkv, d)   # (B, nb*bs, Hkv, d)
+    v = vpool[block_tables].reshape(B, -1, Hkv, d)
+    if Hkv != H:
+        k = jnp.repeat(k, H // Hkv, axis=2)
+        v = jnp.repeat(v, H // Hkv, axis=2)
+    s = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (d ** 0.5)
+    pos = jnp.arange(k.shape[1], dtype=jnp.int32)
+    s = jnp.where((pos[None] < lengths[:, None])[:, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhk,bkhd->bhd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

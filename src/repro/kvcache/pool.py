@@ -1,0 +1,137 @@
+"""Paged KV block pool with Clock2Q+-managed HBM residency.
+
+The block table of a paged KV cache is a metadata structure mapping
+logical (sequence, block-index) -> physical HBM block — exactly the
+LBN->PBN mapping of the paper (DESIGN.md §2).  The pool is two-tiered:
+
+    HBM  (jnp arrays)  <- Clock2Q+ decides residency (ProdClock2QPlus)
+    host (numpy mirror) <- eviction target ("disk"); dirty = HBM-only
+
+Block keys are content hashes for prefix-shared full blocks (identical
+prompts share physical blocks) and (seq_id, block_idx) handles for
+per-sequence tail blocks.  Correlated references arise naturally: request
+admission touches all prefix blocks of a sequence back-to-back.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.prodcache import EMPTY, ProdClock2QPlus
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class PoolStats:
+    hits: int = 0
+    misses: int = 0
+    swap_in: int = 0       # host -> HBM copies
+    swap_out: int = 0      # HBM -> host copies (dirty evictions)
+    drops: int = 0         # clean evictions (host copy already existed)
+
+    @property
+    def hit_ratio(self) -> float:
+        return self.hits / max(1, self.hits + self.misses)
+
+
+class BlockPool:
+    """Fixed HBM pool of KV blocks + host tier, Clock2Q+ replacement."""
+
+    def __init__(self, cfg: ModelConfig, n_hbm_blocks: int, block_size: int,
+                 n_host_blocks: int = 0, dtype=jnp.float32, *,
+                 window_frac: float = 0.5, max_hbm_blocks: int = 0):
+        self.cfg = cfg
+        self.bs = block_size
+        self.n_blocks = n_hbm_blocks
+        L, H, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+        self.kpool = jnp.zeros((L, n_hbm_blocks, block_size, H, hd), dtype)
+        self.vpool = jnp.zeros_like(self.kpool)
+        self.policy = ProdClock2QPlus(
+            n_hbm_blocks, track_io=True, window_frac=window_frac,
+            max_capacity=max(n_hbm_blocks, max_hbm_blocks))
+        self.host: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+        self.n_host_blocks = n_host_blocks or 4 * n_hbm_blocks
+        self.stats = PoolStats()
+
+    # -- residency ------------------------------------------------------------
+    def lookup(self, key: int, pin: bool = True) -> Tuple[int, bool]:
+        """Returns (hbm_slot, needs_fill).  On miss, a slot is allocated
+        (evicting per Clock2Q+); if the key has a host copy it is swapped
+        in; otherwise the caller must fill the block (needs_fill=True)."""
+        r = self.policy.access(key, pin=pin)
+        if r.hit:
+            self.stats.hits += 1
+            return r.block, False
+        self.stats.misses += 1
+        if r.evicted_key != EMPTY:
+            self._on_evict(r.evicted_key, r.evicted_block)
+        if key in self.host:
+            self._swap_in(key, r.block)
+            self.policy.io_done(key)
+            return r.block, False
+        # brand-new block: contents will be written by prefill/decode
+        return r.block, True
+
+    def _on_evict(self, key: int, slot: int) -> None:
+        """HBM eviction: dirty blocks (no host copy) are swapped out."""
+        if key in self.host:
+            self.stats.drops += 1
+            return
+        if len(self.host) < self.n_host_blocks:
+            self.host[key] = (np.asarray(self.kpool[:, slot]),
+                              np.asarray(self.vpool[:, slot]))
+            self.stats.swap_out += 1
+
+    def _swap_in(self, key: int, slot: int) -> None:
+        k, v = self.host[key]
+        self.kpool = self.kpool.at[:, slot].set(jnp.asarray(k))
+        self.vpool = self.vpool.at[:, slot].set(jnp.asarray(v))
+        self.stats.swap_in += 1
+
+    def write_block(self, slot: int, k: jnp.ndarray, v: jnp.ndarray,
+                    key: Optional[int] = None) -> None:
+        """k/v: (L, block_size, H, hd) — fill a block after prefill."""
+        self.kpool = self.kpool.at[:, slot].set(k)
+        self.vpool = self.vpool.at[:, slot].set(v)
+        if key is not None:
+            self.policy.io_done(key)
+            self.policy.set_dirty(key)  # HBM-only content until flushed
+
+    def write_token(self, slot: int, offset: int, k: jnp.ndarray,
+                    v: jnp.ndarray) -> None:
+        """k/v: (L, H, hd) — append one decoded token into a block."""
+        self.kpool = self.kpool.at[:, slot, offset].set(k)
+        self.vpool = self.vpool.at[:, slot, offset].set(v)
+
+    def unpin(self, key: int) -> None:
+        self.policy.unpin(key)
+
+    def flush(self, key: int) -> None:
+        """Mirror a dirty block to host (background flusher)."""
+        eid = self.policy._hash_lookup(key)
+        if eid == EMPTY:
+            return
+        slot = int(self.policy.block[eid])
+        if key not in self.host and len(self.host) < self.n_host_blocks:
+            self.host[key] = (np.asarray(self.kpool[:, slot]),
+                              np.asarray(self.vpool[:, slot]))
+            self.stats.swap_out += 1
+        self.policy.clean(key)
+
+    def run_flusher(self, max_blocks: int = 4) -> int:
+        """Watermark flusher (paper §4.1.3): mirror oldest dirty blocks."""
+        dirty = self.policy.dirty_keys()[:max_blocks]
+        for k in dirty:
+            self.flush(k)
+        return len(dirty)
+
+    # -- elastic resize (paper §4.2 -> HBM budget changes) -----------------------
+    def resize(self, new_n_blocks: int, steps_per_call: int = 64) -> None:
+        self.policy.begin_resize(new_n_blocks)
+        while not self.policy.resize_step(steps_per_call):
+            pass

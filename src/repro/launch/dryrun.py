@@ -1,0 +1,294 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (architecture x input-shape x mesh) cell: build the step
+function (train / prefill / decode), attach in/out shardings from the rule
+engine, ``jit(...).lower(**ShapeDtypeStructs).compile()``, and record
+memory analysis, cost analysis, and the HLO collective schedule into
+experiments/dryrun/<mesh>/<arch>__<shape>.json (resumable: existing files
+are skipped unless --force).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun [--arch A] [--shape S]
+      [--mesh single|multi|both] [--force] [--list]
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch import hlo_analysis, hlo_cost, specs as specs_lib
+from repro.launch.mesh import make_production_mesh
+from repro.models import opt_flags, transformer as T_lib
+from repro.models.config import SHAPES, ModelConfig, cell_applicable
+from repro.models.model import build
+from repro.sharding import rules
+from repro.training import optim, step as step_lib
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def flags_for(arch: str, shape: str, variant: str) -> dict:
+    """Per-cell optimization flags for the 'opt' variant (§Perf)."""
+    if variant != "opt":
+        return {}
+    cfg = get_config(arch)
+    cell = [s for s in SHAPES if s.shape == shape][0]
+    f = {}
+    if cell.kind == "decode":
+        f["decode_shard_scores"] = True
+        if cfg.family in ("dense", "vlm", "moe"):
+            f["decode_buffered"] = True
+    if cfg.family == "ssm" and cell.kind in ("train", "prefill"):
+        f["mamba_seq_scan"] = True  # iteration 2.2 (2.1 refuted)
+    if arch == "kimi-k2-1t-a32b" and cell.kind == "train":
+        f["moe_local_dispatch"] = True
+    return f
+
+# per-arch training knobs (microbatches, moment dtype) chosen for HBM
+TRAIN_KNOBS = {
+    "kimi-k2-1t-a32b": dict(microbatches=8, moment_dtype="bfloat16"),
+    "phi3-medium-14b": dict(microbatches=4, moment_dtype="float32"),
+    "granite-3-8b": dict(microbatches=4, moment_dtype="float32"),
+    "llava-next-mistral-7b": dict(microbatches=4, moment_dtype="float32"),
+    "chatglm3-6b": dict(microbatches=4, moment_dtype="float32"),
+    "falcon-mamba-7b": dict(microbatches=4, moment_dtype="float32"),
+    "zamba2-2.7b": dict(microbatches=2, moment_dtype="float32"),
+}
+
+
+def _shard(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _sds(tree):
+    return jax.tree.map(lambda t: jax.ShapeDtypeStruct(t.shape, t.dtype), tree)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               variant: str = "base"):
+    cfg = get_config(arch)
+    cell = [s for s in SHAPES if s.shape == shape_name][0]
+    skip = cell_applicable(cfg, cell)
+    if skip:
+        return {"status": "SKIP", "reason": skip}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    api = build(cfg)
+    log = rules.RuleLog()
+    t0 = time.time()
+    with opt_flags.use_flags(**flags_for(arch, shape_name, variant)):
+        return _lower_cell_inner(cfg, cell, mesh, api, log, t0, arch,
+                                 shape_name, multi_pod, variant)
+
+
+def _lower_cell_inner(cfg, cell, mesh, api, log, t0, arch, shape_name,
+                      multi_pod, variant):
+
+    with jax.set_mesh(mesh):
+        params_shape = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+        pspecs = rules.param_specs(cfg, mesh, params_shape, log)
+        bshapes = specs_lib.batch_shapes(cfg, cell)
+        bspecs = rules.batch_specs(cfg, mesh, bshapes, log)
+        binputs = specs_lib.input_specs(cfg, cell)
+
+        if cell.kind == "train":
+            knobs = TRAIN_KNOBS.get(arch, dict(microbatches=1,
+                                               moment_dtype="float32"))
+            oc = optim.AdamWConfig(moment_dtype=knobs["moment_dtype"])
+            rc = step_lib.RunConfig(microbatches=knobs["microbatches"],
+                                    adamw=oc)
+            state_shape = step_lib.abstract_train_state(api, oc)
+            ospecs = rules.opt_state_specs(cfg, mesh, params_shape, pspecs,
+                                           log)
+            state_spec = step_lib.TrainState(
+                params=pspecs,
+                opt=optim.OptState(mu=ospecs, nu=ospecs, step=P()))
+            train_step = step_lib.make_train_step(api, rc)
+            jitted = jax.jit(
+                train_step,
+                in_shardings=(_shard(mesh, state_spec),
+                              _shard(mesh, bspecs)),
+                out_shardings=(_shard(mesh, state_spec), None),
+                donate_argnums=(0,))
+            lowered = jitted.lower(_sds(state_shape), binputs)
+        elif cell.kind == "prefill":
+            pre = step_lib.make_prefill_step(api)
+            cache_shape = jax.eval_shape(
+                lambda p, b: api.prefill(p, b)[1], params_shape,
+                _sds_batch(binputs))
+            cspecs = rules.cache_specs(cfg, mesh, cache_shape, log)
+            jitted = jax.jit(
+                pre,
+                in_shardings=(_shard(mesh, pspecs), _shard(mesh, bspecs)),
+                out_shardings=(None, _shard(mesh, cspecs)))
+            lowered = jitted.lower(_sds(params_shape), binputs)
+        else:  # decode
+            B, S = cell.global_batch, cell.seq_len
+            buffered = (opt_flags.FLAGS.decode_buffered
+                        and cfg.family in ("dense", "vlm", "moe"))
+            if buffered:
+                R = opt_flags.FLAGS.decode_buffer_len
+                cache_shape = jax.eval_shape(
+                    lambda: T_lib.init_buffered_cache(cfg, B, S, buf_len=R))
+                dec = lambda p, t, c: T_lib.forward_decode_buffered(
+                    cfg, p, t, c)
+            else:
+                cache_shape = jax.eval_shape(lambda: api.init_cache(B, S))
+                dec = step_lib.make_decode_step(api)
+            cspecs = rules.cache_specs(cfg, mesh, cache_shape, log)
+            tok_sds = binputs["tokens"]
+            tok_spec = rules.batch_specs(
+                cfg, mesh, {"tokens": ((B, 1), jnp.int32)}, log)["tokens"]
+            jitted = jax.jit(
+                dec,
+                in_shardings=(_shard(mesh, pspecs),
+                              NamedSharding(mesh, tok_spec),
+                              _shard(mesh, cspecs)),
+                out_shardings=(None, _shard(mesh, cspecs)),
+                donate_argnums=(2,))
+            lowered = jitted.lower(_sds(params_shape), tok_sds,
+                                   _sds(cache_shape))
+            if buffered:  # the amortized ring->base flush, every R steps
+                jc = jax.jit(lambda c: T_lib.commit_buffer(cfg, c),
+                             in_shardings=(_shard(mesh, cspecs),),
+                             out_shardings=_shard(mesh, cspecs),
+                             donate_argnums=(0,))
+                commit_lowered = jc.lower(_sds(cache_shape))
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        commit_extra = None
+        if cell.kind == "decode" and opt_flags.FLAGS.decode_buffered \
+                and cfg.family in ("dense", "vlm", "moe"):
+            ccomp = commit_lowered.compile()
+            cla = hlo_cost.analyze(ccomp.as_text())
+            R = opt_flags.FLAGS.decode_buffer_len
+            commit_extra = {
+                "flops": cla["flops"], "hbm_bytes": cla["hbm_bytes"],
+                "collective_wire_bytes": cla["collective_wire_bytes"],
+                "amortize_over": R}
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+    hlo = compiled.as_text()
+    n_chips = int(np.prod(mesh.devices.shape))
+    # loop-aware structural cost model (XLA's cost_analysis counts while
+    # bodies once — see hlo_cost.py); per-device numbers.
+    la = hlo_cost.analyze(hlo)
+    flops = la["flops"]
+    bytes_acc = la["hbm_bytes"]
+    wire = la["collective_wire_bytes"]
+    coll = la["collectives"]
+    if commit_extra is not None:  # fold in the amortized commit cost
+        R = commit_extra["amortize_over"]
+        flops += commit_extra["flops"] / R
+        bytes_acc += commit_extra["hbm_bytes"] / R
+        wire += commit_extra["collective_wire_bytes"] / R
+    terms = hlo_analysis.roofline_terms(flops, bytes_acc, wire, n_chips)
+    xla_flops = float(cost.get("flops", 0.0)) if cost else 0.0
+    xla_bytes = float(cost.get("bytes accessed", 0.0)) if cost else 0.0
+
+    mem_d = {}
+    if mem is not None:
+        for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes"):
+            mem_d[f] = getattr(mem, f, None)
+
+    return {
+        "status": "OK",
+        "arch": arch, "shape": shape_name,
+        "variant": variant,
+        "commit_amortized": commit_extra,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips,
+        "kind": cell.kind,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory_analysis": mem_d,
+        "cost_flops": flops,
+        "cost_bytes_accessed": bytes_acc,
+        "xla_cost_flops_looponce": xla_flops,
+        "xla_cost_bytes_looponce": xla_bytes,
+        "collectives": coll,
+        "collective_wire_bytes": wire,
+        "byte_categories": la.get("byte_categories", {}),
+        "roofline": terms,
+        "sharding_fallbacks": log.fallbacks,
+        "hlo_bytes": len(hlo),
+    }
+
+
+def _sds_batch(binputs):
+    return binputs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--variant", default="base", choices=["base", "opt"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else ARCH_IDS
+    shapes = [args.shape] if args.shape else [s.shape for s in SHAPES]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    cells = [(a, s, m) for a in archs for s in shapes for m in meshes]
+    if args.list:
+        for c in cells:
+            print(c)
+        return
+
+    for arch, shape_name, multi in cells:
+        root = OUT_DIR if args.variant == "base" else \
+            OUT_DIR.parent / "dryrun_opt"
+        mdir = root / ("2x16x16" if multi else "16x16")
+        mdir.mkdir(parents=True, exist_ok=True)
+        out = mdir / f"{arch}__{shape_name}.json"
+        if out.exists() and not args.force:
+            print(f"[skip-cached] {out.name} ({'multi' if multi else 'single'})")
+            continue
+        label = f"{arch} x {shape_name} x {'2x16x16' if multi else '16x16'}"
+        print(f"[dryrun] {label} ...", flush=True)
+        t0 = time.time()
+        try:
+            rec = lower_cell(arch, shape_name, multi, variant=args.variant)
+        except Exception as e:  # noqa: BLE001 — record the failure, keep going
+            rec = {"status": "FAIL", "error": repr(e),
+                   "traceback": traceback.format_exc()[-4000:]}
+        rec["wall_s"] = round(time.time() - t0, 1)
+        out.write_text(json.dumps(rec, indent=1, default=str))
+        status = rec["status"]
+        extra = ""
+        if status == "OK":
+            r = rec["roofline"]
+            extra = (f" flops={rec['cost_flops']:.3e}"
+                     f" dom={r['dominant']} bound={r['bound_s']:.4f}s"
+                     f" compile={rec['compile_s']}s")
+        elif status == "FAIL":
+            extra = " " + rec["error"][:200]
+        print(f"[{status}] {label}{extra} ({rec['wall_s']}s)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

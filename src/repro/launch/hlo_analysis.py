@@ -1,0 +1,89 @@
+"""Parse collective-communication bytes out of optimized HLO text and
+compute the three roofline terms (DESIGN.md §7).
+
+Hardware model: TPU v5e-class chip — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (values fixed by the assignment).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict, Tuple
+
+PEAK_FLOPS = 197e12     # bf16 / chip
+HBM_BW = 819e9          # bytes/s / chip
+ICI_BW = 50e9           # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# bytes-on-the-wire multiplier per output byte (ring algorithms):
+#   all-reduce moves ~2x the buffer; the others ~1x.
+_WIRE_MULT = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+              "all-to-all": 1.0, "collective-permute": 1.0}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per-collective-kind: op count, result bytes, wire bytes."""
+    out = {k: {"count": 0, "bytes": 0.0, "wire_bytes": 0.0}
+           for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        # result-shape then op name:  %x = bf16[..]{..} all-gather(...)
+        m = re.match(r"^(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\],{}\s]*?)\s+([a-z\-]+)(?:\.\d+)?\(", ls)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        # normalize fused variants like "all-gather-start"
+        base = None
+        for k in _COLLECTIVES:
+            if op == k or op.startswith(k + "-"):
+                base = k
+                break
+        if base is None:
+            continue
+        if op.endswith("-done"):
+            continue  # counted at -start
+        b = _shape_bytes(shape_str)
+        out[base]["count"] += 1
+        out[base]["bytes"] += b
+        out[base]["wire_bytes"] += b * _WIRE_MULT[base]
+    return out
+
+
+def roofline_terms(flops: float, hbm_bytes: float, coll_wire_bytes: float,
+                   n_chips: int, links_per_chip: int = 4,
+                   per_device: bool = True) -> Dict[str, float]:
+    """All inputs are per-device when ``per_device`` (XLA reports the
+    partitioned module); terms in seconds."""
+    div = 1 if per_device else n_chips
+    t_compute = (flops / div) / PEAK_FLOPS
+    t_memory = (hbm_bytes / div) / HBM_BW
+    t_coll = (coll_wire_bytes / div) / (ICI_BW * links_per_chip)
+    dom = max((t_compute, "compute"), (t_memory, "memory"),
+              (t_coll, "collective"))
+    return {"t_compute_s": t_compute, "t_memory_s": t_memory,
+            "t_collective_s": t_coll, "dominant": dom[1],
+            "bound_s": dom[0]}

@@ -1,0 +1,353 @@
+"""Loop-aware HLO cost model.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE, which
+under-reports FLOPs/bytes by ~n_layers x microbatches for scanned models
+(verified empirically — see EXPERIMENTS.md §Dry-run).  This module parses
+the optimized HLO text and walks the call graph multiplying every
+computation's cost by the enclosing loops' ``known_trip_count``:
+
+  * FLOPs: dot ops (2 * prod(output) * prod(lhs contracting dims)).
+  * HBM bytes: per materializing op (fusion/dot/copy/slice/...) — operand
+    bytes + output bytes, where a fusion parameter consumed only through
+    dynamic-slice ops is charged at slice size, not full size.
+  * Collectives: count + result bytes + ring wire bytes, per kind.
+
+This is a structural model (roofline input), not a cycle-accurate one.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "f8e5m2fnuz": 1, "f8e4m3b11fnuz": 1, "token": 0, "opaque": 0,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "ragged-all-to-all")
+_WIRE_MULT = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+              "all-to-all": 1.0, "collective-permute": 1.0,
+              "ragged-all-to-all": 1.0}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*"          # result name
+    r"((?:\([^()]*\))|(?:\w+\[[\d,]*\](?:{[^}]*})?))\s+"  # shape (or tuple)
+    r"([\w\-]+?)"                                  # op name
+    r"\((.*)$")                                    # operands + attrs
+_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count\D+(\d+)')
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_TOAPPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_BRANCHES_RE = re.compile(r"(?:branch_computations|true_computation|"
+                          r"false_computation)=\{?%?([\w.\-,%\s]+)\}?")
+
+
+def _shape_dims(shape_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(shape_str):
+        dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+        out.append((m.group(1), dims))
+    return out
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _shape_dims(shape_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES.get(dt, 0)
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape: str
+    op: str
+    rest: str
+
+    @property
+    def operands(self) -> List[str]:
+        # operand list = %names before the closing paren of the op call;
+        # attributes follow after "), " — cut at the first ")," at depth 0
+        depth = 0
+        end = len(self.rest)
+        for i, ch in enumerate(self.rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                if depth == 0:
+                    end = i
+                    break
+                depth -= 1
+        return _OPERAND_RE.findall(self.rest[:end])
+
+
+@dataclasses.dataclass
+class CostTotals:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, Dict[str, float]] = dataclasses.field(
+        default_factory=lambda: {k: {"count": 0.0, "bytes": 0.0,
+                                     "wire_bytes": 0.0} for k in COLLECTIVES})
+    by_cat: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def cat(self, name: str, b: float):
+        self.by_cat[name] = self.by_cat.get(name, 0.0) + b
+
+    def add(self, other: "CostTotals", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k in COLLECTIVES:
+            for f in ("count", "bytes", "wire_bytes"):
+                self.coll[k][f] += other.coll[k][f] * mult
+        for k, v in other.by_cat.items():
+            self.by_cat[k] = self.by_cat.get(k, 0.0) + v * mult
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.comps: Dict[str, Dict[str, Instr]] = {}
+        self.order: Dict[str, List[Instr]] = {}
+        self.entry: Optional[str] = None
+        self._parse(hlo_text)
+        self._memo: Dict[str, CostTotals] = {}
+
+    # -- parsing -------------------------------------------------------------
+    def _parse(self, text: str):
+        cur = None
+        for raw in text.splitlines():
+            line = raw.strip()
+            if cur is None or (line.endswith("{") and "=" not in line.split("{")[0]):
+                h = _HDR_RE.match(line)
+                if h and line.rstrip().endswith("{"):
+                    cur = h.group(1)
+                    self.comps[cur] = {}
+                    self.order[cur] = []
+                    if line.startswith("ENTRY"):
+                        self.entry = cur
+                    continue
+            if cur is None:
+                continue
+            if line == "}":
+                cur = None
+                continue
+            m = _INSTR_RE.match(line)
+            if not m:
+                continue
+            ins = Instr(m.group(1), m.group(2), m.group(3), m.group(4))
+            self.comps[cur][ins.name] = ins
+            self.order[cur].append(ins)
+
+    def _operand_shape(self, comp: str, name: str) -> Optional[str]:
+        ins = self.comps[comp].get(name)
+        return ins.shape if ins is not None else None
+
+    # -- per-op costs -----------------------------------------------------------
+    def _dot_flops(self, comp: str, ins: Instr) -> float:
+        out_elems = 1
+        for _, dims in _shape_dims(ins.shape):
+            for d in dims:
+                out_elems *= d
+        m = _LHS_CONTRACT_RE.search(ins.rest)
+        k = 1
+        if m and m.group(1):
+            ops = ins.operands
+            lhs_shape = self._operand_shape(comp, ops[0]) if ops else None
+            if lhs_shape:
+                dims = _shape_dims(lhs_shape)[0][1]
+                for idx in m.group(1).split(","):
+                    i = int(idx)
+                    if i < len(dims):
+                        k *= dims[i]
+        return 2.0 * out_elems * k
+
+    def _fusion_bytes(self, comp: str, ins: Instr) -> float:
+        """Operand + output bytes; params consumed only via dynamic-slice
+        are charged at total sliced size instead of full size."""
+        called = _CALLS_RE.search(ins.rest)
+        total = _shape_bytes(ins.shape)  # output write
+        inner = self.comps.get(called.group(1)) if called else None
+        operands = ins.operands
+        if inner is None:
+            for o in operands:
+                s = self._operand_shape(comp, o)
+                if s:
+                    total += _shape_bytes(s)
+            return total
+        # map param index -> inner param name
+        params = {}
+        for iname, iins in inner.items():
+            if iins.op == "parameter":
+                pm = re.match(r"(\d+)", iins.rest)
+                if pm:
+                    params[int(pm.group(1))] = iname
+        cname = called.group(1)
+        inner_order = self.order.get(cname) or []
+        inner = self.comps[cname]
+        dus_update_bytes = 0
+        dus_target_params = set()
+        for u in inner_order:
+            if u.op == "dynamic-update-slice":
+                ops_u = u.operands
+                if ops_u and ops_u[0] in set(params.values()):
+                    dus_target_params.add(ops_u[0])
+                if len(ops_u) > 1:
+                    s = inner.get(ops_u[1])
+                    dus_update_bytes += _shape_bytes(s.shape) if s else 0
+        # per-use accounting: direct uses of a fusion parameter are charged
+        # at what they actually touch (slice reads, in-place update writes);
+        # any full-reading use charges the whole buffer once.
+        for pi, o in enumerate(operands):
+            s = self._operand_shape(comp, o)
+            if s is None:
+                continue
+            pname = params.get(pi)
+            uses = [u for u in inner_order
+                    if pname in u.operands] if pname else []
+            if not uses:
+                total += _shape_bytes(s)
+                continue
+            b = 0
+            full = False
+            for u in uses:
+                if u.op in ("dynamic-slice", "gather"):
+                    b += _shape_bytes(u.shape)
+                elif (u.op == "dynamic-update-slice"
+                      and u.operands and u.operands[0] == pname):
+                    us = inner.get(u.operands[1]) if len(u.operands) > 1 \
+                        else None
+                    b += 2 * (_shape_bytes(us.shape) if us else 0)
+                else:
+                    full = True
+            total += max(b, _shape_bytes(s)) if full else b
+        if dus_target_params:
+            # output aliases the updated buffer: replace the full-output
+            # charge with the update-region write
+            total -= _shape_bytes(ins.shape)
+            total += 2 * dus_update_bytes
+        return total
+
+    # -- computation walk --------------------------------------------------------
+    def comp_cost(self, comp: str) -> CostTotals:
+        if comp in self._memo:
+            return self._memo[comp]
+        tot = CostTotals()
+        self._memo[comp] = tot  # guard cycles
+        for ins in self.order.get(comp, []):
+            op = ins.op
+            if op == "dot":
+                tot.flops += self._dot_flops(comp, ins)
+                b = _shape_bytes(ins.shape)
+                for o in ins.operands:
+                    s = self._operand_shape(comp, o)
+                    if s:
+                        b += _shape_bytes(s)
+                tot.bytes += b
+                tot.cat("dot", b)
+            elif op == "fusion":
+                called = _CALLS_RE.search(ins.rest)
+                if called and called.group(1) in self.comps:
+                    tot.add(self._flops_only(self.comp_cost(called.group(1))))
+                b = self._fusion_bytes(comp, ins)
+                tot.bytes += b
+                # category = fusion-name prefix (e.g. "convert", "transpose")
+                cat = re.split(r"[._]", ins.name)[0] or "fusion"
+                tot.cat("fusion:" + cat, b)
+            elif op == "while":
+                trip = 1
+                tm = _TRIP_RE.search(ins.rest)
+                if tm:
+                    trip = int(tm.group(1))
+                body = _BODY_RE.search(ins.rest)
+                cond = _COND_RE.search(ins.rest)
+                sub = CostTotals()
+                if body and body.group(1) in self.comps:
+                    sub.add(self.comp_cost(body.group(1)))
+                if cond and cond.group(1) in self.comps:
+                    sub.add(self.comp_cost(cond.group(1)))
+                tot.add(sub, mult=trip)
+            elif op in ("call", "async-start"):
+                cm = _TOAPPLY_RE.search(ins.rest) or _CALLS_RE.search(ins.rest)
+                if cm and cm.group(1) in self.comps:
+                    tot.add(self.comp_cost(cm.group(1)))
+            elif op == "conditional":
+                bm = _BRANCHES_RE.search(ins.rest)
+                if bm:
+                    names = re.findall(r"[\w.\-]+", bm.group(1))
+                    subs = [self.comp_cost(n) for n in names
+                            if n in self.comps]
+                    if subs:
+                        best = max(subs, key=lambda c: c.flops + c.bytes)
+                        tot.add(best)
+            elif any(op == k or op.startswith(k + "-") for k in COLLECTIVES):
+                if op.endswith("-done"):
+                    continue
+                base = next(k for k in COLLECTIVES
+                            if op == k or op.startswith(k + "-"))
+                b = _shape_bytes(ins.shape)
+                tot.coll[base]["count"] += 1
+                tot.coll[base]["bytes"] += b
+                tot.coll[base]["wire_bytes"] += b * _WIRE_MULT[base]
+                tot.bytes += b  # collectives also touch HBM
+                tot.cat(f"coll:{base}:{ins.shape[:48]}", b)
+            elif op == "dynamic-slice":
+                tot.bytes += 2 * _shape_bytes(ins.shape)  # read + write slice
+                tot.cat("dynamic-slice", 2 * _shape_bytes(ins.shape))
+            elif op == "dynamic-update-slice":
+                ops_u = ins.operands
+                upd = self._operand_shape(comp, ops_u[1]) if len(ops_u) > 1 \
+                    else None
+                b = 2 * _shape_bytes(upd) if upd else _shape_bytes(ins.shape)
+                tot.bytes += b
+                tot.cat("dynamic-update-slice", b)
+            elif op in ("copy", "copy-start", "transpose", "reshape",
+                        "broadcast", "convert", "slice",
+                        "concatenate", "pad",
+                        "reduce", "gather", "scatter", "select", "compare",
+                        "add", "multiply", "iota", "reverse", "sort",
+                        "convolution", "rng-bit-generator", "exponential",
+                        "custom-call"):
+                b = _shape_bytes(ins.shape)
+                for o in ins.operands:
+                    s = self._operand_shape(comp, o)
+                    if s:
+                        b += _shape_bytes(s)
+                tot.bytes += b
+                tot.cat(op, b)
+            # parameter / constant / tuple / get-tuple-element / bitcast: free
+        return tot
+
+    @staticmethod
+    def _flops_only(c: CostTotals) -> CostTotals:
+        out = CostTotals()
+        out.flops = c.flops
+        for k in COLLECTIVES:
+            out.coll[k] = dict(c.coll[k])
+        return out
+
+    def total(self) -> CostTotals:
+        if self.entry is None:
+            return CostTotals()
+        return self.comp_cost(self.entry)
+
+
+def analyze(hlo_text: str) -> Dict:
+    cm = HloCostModel(hlo_text)
+    tot = cm.total()
+    wire = sum(v["wire_bytes"] for v in tot.coll.values())
+    cats = dict(sorted(tot.by_cat.items(), key=lambda kv: -kv[1])[:12])
+    return {"flops": tot.flops, "hbm_bytes": tot.bytes,
+            "collectives": tot.coll, "collective_wire_bytes": wire,
+            "byte_categories": cats}

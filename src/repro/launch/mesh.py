@@ -1,0 +1,31 @@
+"""Production mesh builders.
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state): single-pod = (16, 16) over ("data", "model") = 256
+chips; multi-pod = (2, 16, 16) over ("pod", "data", "model") = 512 chips.
+The dry-run driver sets XLA_FLAGS=--xla_force_host_platform_device_count
+before any jax import so these meshes can be built on CPU.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def _auto(n):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many (CPU) devices exist — used by tests."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = max(1, min(model, n // data))
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=_auto(2))

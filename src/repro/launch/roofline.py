@@ -1,0 +1,152 @@
+"""Roofline report generator (deliverable g).
+
+Reads the dry-run records (experiments/dryrun/<mesh>/<arch>__<shape>.json),
+computes MODEL_FLOPS (6·N·D dense / 6·N_active·D MoE for train; 2·N_active
+per generated/prefilled token for serving), the three roofline terms, the
+useful-compute ratio, and the dominant bottleneck per cell; writes
+experiments/roofline.md.
+
+    PYTHONPATH=src python -m repro.launch.roofline
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs import get_config
+from repro.launch.hlo_analysis import PEAK_FLOPS
+from repro.models.config import shape_by_name
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments"
+
+
+def model_flops(arch: str, shape: str) -> float:
+    cfg = get_config(arch)
+    cell = shape_by_name(shape)
+    n_act = cfg.n_active_params()
+    if cell.kind == "train":
+        return 6.0 * n_act * cell.global_batch * cell.seq_len
+    if cell.kind == "prefill":
+        return 2.0 * n_act * cell.global_batch * cell.seq_len
+    return 2.0 * n_act * cell.global_batch  # decode: one token per seq
+
+
+def mitigation(rec: dict) -> str:
+    arch, shape = rec["arch"], rec["shape"]
+    dom = rec["roofline"]["dominant"]
+    cats = rec.get("byte_categories", {})
+    top = max(cats, key=cats.get) if cats else ""
+    if dom == "memory":
+        if "convert" in top or "dynamic-update-slice" in top:
+            if rec["kind"] == "decode":
+                return ("paged/one-hot cache writes avoid the full-shard "
+                        "select+convert the sharded DUS lowers to")
+            return ("blocked (flash) attention / fused mixed-precision "
+                    "removes materialized f32 score tensors")
+        if "transpose" in top:
+            return "store KV pre-transposed in the attention's layout"
+        if "dot" in top:
+            return "already dot-dominated: raise arithmetic intensity (batch)"
+        return "fuse the dominant fusion chain (see byte_categories)"
+    if dom == "collective":
+        return "overlap collectives with compute; reshard to cut volume"
+    return "compute-bound: good; tune block shapes for MXU utilization"
+
+
+def load_records(variant: str = "dryrun"):
+    recs = {}
+    for mesh_dir in sorted((OUT_DIR / variant).glob("*x*")):
+        for f in sorted(mesh_dir.glob("*.json")):
+            rec = json.loads(f.read_text())
+            arch, shape = f.stem.split("__")
+            rec.setdefault("arch", arch)
+            rec.setdefault("shape", shape)
+            recs[(mesh_dir.name, arch, shape)] = rec
+    return recs
+
+
+def build_report() -> str:
+    recs = load_records()
+    lines = ["# Roofline analysis (per device; v5e: 197 TF/s bf16, "
+             "819 GB/s HBM, 4x50 GB/s ICI)", ""]
+    for mesh in sorted({m for m, _, _ in recs}):
+        lines.append(f"\n## Mesh {mesh}\n")
+        lines.append("| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) "
+                     "| dominant | MODEL_FLOPS/dev | useful/HLO | roofline "
+                     "frac | top byte category | next move |")
+        lines.append("|---|---|---|---|---|---|---|---|---|---|---|")
+        for (m, arch, shape), rec in sorted(recs.items()):
+            if m != mesh:
+                continue
+            if rec.get("status") == "SKIP":
+                lines.append(f"| {arch} | {shape} | — | — | — | SKIP | — | "
+                             f"— | — | — | {rec['reason'][:60]} |")
+                continue
+            if rec.get("status") != "OK":
+                lines.append(f"| {arch} | {shape} | — | — | — | FAIL | — | "
+                             f"— | — | — | {rec.get('error', '')[:60]} |")
+                continue
+            r = rec["roofline"]
+            mf = model_flops(arch, shape) / rec["n_chips"]
+            ratio = mf / max(rec["cost_flops"], 1.0)
+            t_useful = mf / PEAK_FLOPS
+            frac = t_useful / max(r["bound_s"], 1e-12)
+            cats = rec.get("byte_categories", {})
+            top = max(cats, key=cats.get) if cats else "-"
+            topv = cats.get(top, 0.0)
+            lines.append(
+                f"| {arch} | {shape} | {r['t_compute_s']:.4f} | "
+                f"{r['t_memory_s']:.4f} | {r['t_collective_s']:.5f} | "
+                f"{r['dominant']} | {mf:.3e} | {ratio:.2f} | "
+                f"{frac*100:.1f}% | {top} ({topv/1e9:.0f} GB) | "
+                f"{mitigation(rec)} |")
+    # hillclimb candidates
+    singles = {k: v for k, v in recs.items()
+               if k[0] == "16x16" and v.get("status") == "OK"}
+
+    def frac_of(k):
+        rec = singles[k]
+        mf = model_flops(k[1], k[2]) / rec["n_chips"]
+        return (mf / PEAK_FLOPS) / max(rec["roofline"]["bound_s"], 1e-12)
+
+    worst = min(singles, key=frac_of)
+    coll = max(singles,
+               key=lambda k: singles[k]["roofline"]["t_collective_s"]
+               / max(singles[k]["roofline"]["bound_s"], 1e-12))
+    lines.append("\n## Hillclimb candidates (single-pod)\n")
+    lines.append(f"* worst roofline fraction: {worst[1]} x {worst[2]} "
+                 f"({frac_of(worst)*100:.2f}%)")
+    lines.append(f"* most collective-bound: {coll[1]} x {coll[2]}")
+    lines.append("* most paper-representative: granite-3-8b x decode_32k "
+                 "(Clock2Q+-paged KV decode)")
+    # optimized-variant comparison (EXPERIMENTS.md §Perf)
+    opt = load_records("dryrun_opt")
+    if opt:
+        lines.append("\n## Optimized variant (--variant opt) vs baseline\n")
+        lines.append("| mesh | arch | shape | bound base (s) | bound opt "
+                     "(s) | speedup |")
+        lines.append("|---|---|---|---|---|---|")
+        for key, rec in sorted(opt.items()):
+            if rec.get("status") != "OK" or key not in recs:
+                continue
+            b = recs[key]
+            if b.get("status") != "OK":
+                continue
+            b0 = b["roofline"]["bound_s"]
+            b1 = rec["roofline"]["bound_s"]
+            lines.append(f"| {key[0]} | {key[1]} | {key[2]} | {b0:.4f} | "
+                         f"{b1:.4f} | {b0 / max(b1, 1e-12):.2f}x |")
+    return "\n".join(lines) + "\n"
+
+
+def main():
+    report = build_report()
+    out = OUT_DIR / "roofline.md"
+    out.write_text(report)
+    print(report[:4000])
+    print(f"... written to {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Input builders for every (arch x shape) cell.
+
+``make_batch`` returns concrete host arrays (smoke tests / real runs);
+``input_specs`` returns jax.ShapeDtypeStruct stand-ins (dry-run lowering,
+no allocation).  Modality frontends are stubs: VLM cells get precomputed
+patch embeddings, audio cells precomputed frame embeddings (per the
+assignment note).
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import encdec
+from repro.models.config import ModelConfig, ShapeCell
+
+
+def _token_shapes(cfg: ModelConfig, cell: ShapeCell) -> Dict[str, tuple]:
+    B, S = cell.global_batch, cell.seq_len
+    emb_dt = jnp.dtype(cfg.dtype)
+    if cfg.family == "vlm":
+        P = min(cfg.n_patches, S // 2)
+        shapes = {"tokens": ((B, S - P), jnp.int32),
+                  "patch_embeds": ((B, P, cfg.d_model), emb_dt)}
+    elif cfg.family == "encdec":
+        Se = encdec.enc_len_for(cfg, S)
+        shapes = {"tokens": ((B, S), jnp.int32),
+                  "audio_embeds": ((B, Se, cfg.d_model), emb_dt)}
+    else:
+        shapes = {"tokens": ((B, S), jnp.int32)}
+    return shapes
+
+
+def batch_shapes(cfg: ModelConfig, cell: ShapeCell) -> Dict[str, tuple]:
+    """{name: (shape, dtype)} for the step input batch."""
+    B, S = cell.global_batch, cell.seq_len
+    if cell.kind == "train":
+        shapes = _token_shapes(cfg, cell)
+        shapes["labels"] = ((B, S), jnp.int32)
+        return shapes
+    if cell.kind == "prefill":
+        return _token_shapes(cfg, cell)
+    # decode: one new token against a seq_len-sized cache (cache specs come
+    # from api.init_cache and are handled by the dry-run driver).
+    return {"tokens": ((B, 1), jnp.int32)}
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> Dict[str, jax.ShapeDtypeStruct]:
+    return {k: jax.ShapeDtypeStruct(shape, dt)
+            for k, (shape, dt) in batch_shapes(cfg, cell).items()}
+
+
+def make_batch(cfg: ModelConfig, cell: ShapeCell, seed: int = 0) -> Dict:
+    """Concrete random batch (for smoke tests; use the data pipeline for
+    real training)."""
+    rng = np.random.default_rng(seed)
+    out = {}
+    for k, (shape, dt) in batch_shapes(cfg, cell).items():
+        if dt == jnp.int32:
+            hi = cfg.vocab if k in ("tokens", "labels") else 2
+            out[k] = jnp.asarray(rng.integers(0, hi, size=shape), jnp.int32)
+        else:
+            out[k] = jnp.asarray(rng.normal(0, 1, size=shape), dt)
+    if cell.kind == "train" and cfg.family == "vlm":
+        # patch positions carry no next-token target
+        P = out["patch_embeds"].shape[1]
+        lab = np.array(out["labels"])  # writable copy
+        lab[:, :P] = -1
+        out["labels"] = jnp.asarray(lab)
+    return out

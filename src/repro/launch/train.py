@@ -1,0 +1,88 @@
+"""Production-style training launcher (host-mesh scale).
+
+Fault-tolerant loop: resume-from-latest-checkpoint, per-step retry,
+periodic async checkpointing, deterministic restart-safe data pipeline.
+On real TPU pods the same entry point runs under multi-host jax.distributed;
+in this container it runs the reduced configs on the host devices.
+
+    PYTHONPATH=src python -m repro.launch.train --arch olmo-1b \
+        --steps 50 --seq 64 --batch 8 --ckpt /tmp/ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.ckpt import CheckpointManager
+from repro.configs import get_config, reduced
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.models.model import build
+from repro.training import optim, step as step_lib
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--full-config", action="store_true",
+                    help="use the full architecture config (TPU scale)")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full_config:
+        cfg = reduced(cfg)
+    api = build(cfg)
+    print(f"arch={cfg.name} params={cfg.n_params():,}")
+
+    oc = optim.AdamWConfig(lr=args.lr, warmup_steps=10)
+    rc = step_lib.RunConfig(microbatches=args.microbatches, adamw=oc)
+    step_fn = jax.jit(step_lib.make_train_step(api, rc))
+    pipe = TokenPipeline(DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                                    global_batch=args.batch, seed=0))
+    mgr = CheckpointManager(args.ckpt)
+
+    start = mgr.latest_step() or 0
+    if start:
+        like = jax.eval_shape(
+            lambda r: step_lib.init_train_state(api, r, oc),
+            jax.random.PRNGKey(0))
+        state = jax.tree.map(jnp.asarray, mgr.restore(start, like))
+        print(f"resumed from step {start}")
+    else:
+        state = step_lib.init_train_state(api, jax.random.PRNGKey(0), oc)
+
+    t0 = time.time()
+    for i in range(start, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch(i).items()}
+        for attempt in range(3):  # straggler/failure retry
+            try:
+                state, m = step_fn(state, batch)
+                break
+            except Exception as e:  # noqa: BLE001
+                print(f"step {i} attempt {attempt} failed: {e!r}")
+                if attempt == 2:
+                    raise
+        if i % 10 == 0 or i == args.steps - 1:
+            tok_s = args.batch * args.seq * (i - start + 1) \
+                / max(1e-9, time.time() - t0)
+            print(f"step {i:4d} loss={float(m['loss']):.4f} "
+                  f"lr={float(m['lr']):.2e} tok/s={tok_s:,.0f} "
+                  f"idx_cache_hit={pipe.index_hit_ratio:.2f}")
+        if (i + 1) % args.ckpt_every == 0:
+            mgr.save(i + 1, state, blocking=False)
+    mgr.save(args.steps, state, blocking=True)
+    print(f"done; checkpoints: {mgr.all_steps()}")
+
+
+if __name__ == "__main__":
+    main()

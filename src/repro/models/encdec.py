@@ -1,0 +1,205 @@
+"""Whisper-style encoder-decoder backbone (conv audio frontend stubbed:
+``input_specs`` supplies precomputed frame embeddings).  Sinusoidal
+positions on both sides (DESIGN.md notes the learned-decoder-pos
+simplification); pre-LN, GELU MLPs, MHA.
+
+Shape convention for the assigned shape grid: ``seq_len`` is the DECODER
+length; the encoder runs at ``seq_len // 4`` stub frames (as if 4x
+temporally downsampled audio).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+
+class EncDecCache(NamedTuple):
+    k: jnp.ndarray        # (L_dec, B, S_max, H, hd) decoder self-attn
+    v: jnp.ndarray
+    xk: jnp.ndarray       # (L_dec, B, S_enc, H, hd) cross-attn (static)
+    xv: jnp.ndarray
+    length: jnp.ndarray
+
+
+def enc_len_for(cfg: ModelConfig, dec_len: int) -> int:
+    return max(16, dec_len // 4)
+
+
+def sinusoid(S: int, D: int) -> np.ndarray:
+    pos = np.arange(S)[:, None]
+    i = np.arange(D // 2)[None, :]
+    ang = pos / np.power(10_000.0, 2 * i / D)
+    return np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+
+
+def _attn_block_params(cfg: ModelConfig, rng, cross: bool = False) -> Dict:
+    ks = jax.random.split(rng, 3)
+    p = {"ln": L.norm_params(cfg, ks[0]), "attn": L.attn_params(cfg, ks[1])}
+    return p
+
+
+def _layer_params(cfg: ModelConfig, rng, cross: bool) -> Dict:
+    ks = jax.random.split(rng, 4)
+    p = {"self": _attn_block_params(cfg, ks[0]),
+         "ln_mlp": L.norm_params(cfg, ks[1]),
+         "mlp": L.mlp_params(cfg, ks[2])}
+    if cross:
+        p["cross"] = _attn_block_params(cfg, ks[3], cross=True)
+    return p
+
+
+def init_params(cfg: ModelConfig, rng) -> Dict:
+    k1, k2, k3, k4, k5 = jax.random.split(rng, 5)
+    enc_rngs = jax.random.split(k2, cfg.n_enc_layers)
+    dec_rngs = jax.random.split(k3, cfg.n_layers)
+    return {
+        "embed": {"tok": L.embed_init(k1, (cfg.vocab, cfg.d_model),
+                                      L.pdtype_of(cfg)),
+                  "final_norm": L.norm_params(cfg, k5),
+                  "enc_final_norm": L.norm_params(cfg, k5)},
+        "enc": jax.vmap(lambda r: _layer_params(cfg, r, cross=False))(enc_rngs),
+        "dec": jax.vmap(lambda r: _layer_params(cfg, r, cross=True))(dec_rngs),
+    }
+
+
+def _self_attn(cfg, p, x, causal, kc=None, vc=None, pos=None):
+    norm = L.make_norm(cfg)
+    h = norm(x, p["ln"])
+    q, k, v = L.qkv_proj(cfg, p["attn"], h)
+    if kc is not None:  # decode
+        kc = jax.lax.dynamic_update_slice(kc, k, (0, pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v, (0, pos, 0, 0))
+        o = L.attention(q, kc, vc, causal=False, kv_len=pos + 1)
+    else:
+        o = L.attention(q, k, v, causal=causal)
+    o = jnp.einsum("bqx,xd->bqd", o.reshape(*o.shape[:2], -1),
+                   p["attn"]["wo"])
+    return x + o, (k, v), kc, vc
+
+
+def _cross_attn(cfg, p, x, xk, xv):
+    norm = L.make_norm(cfg)
+    h = norm(x, p["ln"])
+    B, S, _ = h.shape
+    q = jnp.einsum("bsd,dh->bsh", h, p["attn"]["wq"]).reshape(
+        B, S, cfg.n_heads, cfg.hd)
+    o = L.attention(q, xk, xv, causal=False)
+    o = jnp.einsum("bqx,xd->bqd", o.reshape(B, S, -1), p["attn"]["wo"])
+    return x + o
+
+
+def _mlp(cfg, p, x):
+    norm = L.make_norm(cfg)
+    return x + L.mlp_apply(cfg, p["mlp"], norm(x, p["ln_mlp"]))
+
+
+def encode(cfg: ModelConfig, params: Dict, audio_embeds: jnp.ndarray):
+    """audio_embeds: (B, S_enc, D) stub-frontend output."""
+    x = audio_embeds.astype(L.dtype_of(cfg))
+    x = x + jnp.asarray(sinusoid(x.shape[1], cfg.d_model),
+                        L.dtype_of(cfg))[None]
+
+    def body(x, p):
+        x, _, _, _ = _self_attn(cfg, p["self"], x, causal=False)
+        return _mlp(cfg, p, x), None
+
+    x, _ = jax.lax.scan(body, x, params["enc"])
+    norm = L.make_norm(cfg)
+    return norm(x, params["embed"]["enc_final_norm"])
+
+
+def _cross_kv(cfg, p, enc_out):
+    B, Se, _ = enc_out.shape
+    k = jnp.einsum("bsd,dh->bsh", enc_out, p["attn"]["wk"]).reshape(
+        B, Se, cfg.n_kv_heads, cfg.hd)
+    v = jnp.einsum("bsd,dh->bsh", enc_out, p["attn"]["wv"]).reshape(
+        B, Se, cfg.n_kv_heads, cfg.hd)
+    return k, v
+
+
+def forward_train(cfg: ModelConfig, params: Dict, batch: Dict,
+                  remat: bool = True):
+    """batch: audio_embeds (B,S_enc,D), tokens (B,S_dec), labels."""
+    enc_out = encode(cfg, params, batch["audio_embeds"])
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = params["embed"]["tok"][tokens].astype(L.dtype_of(cfg))
+    x = x + jnp.asarray(sinusoid(S, cfg.d_model), L.dtype_of(cfg))[None]
+
+    def body(x, p):
+        x, _, _, _ = _self_attn(cfg, p["self"], x, causal=True)
+        xk, xv = _cross_kv(cfg, p["cross"], enc_out)
+        x = _cross_attn(cfg, p["cross"], x, xk, xv)
+        return _mlp(cfg, p, x), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["dec"])
+    norm = L.make_norm(cfg)
+    x = norm(x, params["embed"]["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x,
+                        params["embed"]["tok"].T.astype(x.dtype))
+    return logits, jnp.float32(0.0)
+
+
+def forward_prefill(cfg: ModelConfig, params: Dict, batch: Dict,
+                    max_len: Optional[int] = None):
+    enc_out = encode(cfg, params, batch["audio_embeds"])
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    max_len = max_len or S
+    x = params["embed"]["tok"][tokens].astype(L.dtype_of(cfg))
+    x = x + jnp.asarray(sinusoid(S, cfg.d_model), L.dtype_of(cfg))[None]
+
+    def body(x, p):
+        x, (k, v), _, _ = _self_attn(cfg, p["self"], x, causal=True)
+        xk, xv = _cross_kv(cfg, p["cross"], enc_out)
+        x = _cross_attn(cfg, p["cross"], x, xk, xv)
+        x = _mlp(cfg, p, x)
+        if max_len > S:
+            pad = [(0, 0), (0, max_len - S), (0, 0), (0, 0)]
+            k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+        return x, (k, v, xk, xv)
+
+    x, (ks, vs, xks, xvs) = jax.lax.scan(body, x, params["dec"])
+    norm = L.make_norm(cfg)
+    x = norm(x[:, -1:], params["embed"]["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x,
+                        params["embed"]["tok"].T.astype(x.dtype))
+    return logits, EncDecCache(ks, vs, xks, xvs, jnp.int32(S))
+
+
+def forward_decode(cfg: ModelConfig, params: Dict, tokens: jnp.ndarray,
+                   cache: EncDecCache):
+    B = tokens.shape[0]
+    pos = cache.length
+    x = params["embed"]["tok"][tokens].astype(L.dtype_of(cfg))
+    D = cfg.d_model
+    # sinusoidal position for the current step
+    half = D // 2
+    i = jnp.arange(half, dtype=jnp.float32)
+    ang = pos.astype(jnp.float32) / jnp.power(10_000.0, 2 * i / D)
+    pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])[None, None, :]
+    x = x + pe.astype(x.dtype)
+
+    def body(x, inp):
+        p, kc, vc, xk, xv = inp
+        x, _, kc, vc = _self_attn(cfg, p["self"], x, causal=False,
+                                  kc=kc, vc=vc, pos=pos)
+        x = _cross_attn(cfg, p["cross"], x, xk, xv)
+        return _mlp(cfg, p, x), (kc, vc)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["dec"], cache.k, cache.v,
+                                         cache.xk, cache.xv))
+    norm = L.make_norm(cfg)
+    x = norm(x, params["embed"]["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x,
+                        params["embed"]["tok"].T.astype(x.dtype))
+    return logits, cache._replace(k=ks, v=vs, length=pos + 1)

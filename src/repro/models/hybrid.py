@@ -1,0 +1,180 @@
+"""Zamba2-style hybrid stack: Mamba2 layers + ONE shared attention+MLP
+block invoked every ``shared_attn_every`` layers (weights reused across
+invocations, as in Zamba2; the concat-with-original-embedding trick and
+per-invocation LoRA deltas are simplified away — DESIGN.md §4).
+
+Decode state: per-layer Mamba2 (conv, ssm) states + a KV cache per shared-
+block invocation (G = n_layers // shared_attn_every caches).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models.config import ModelConfig
+
+
+class HybridCache(NamedTuple):
+    conv: jnp.ndarray    # (L, B, K-1, d_inner)
+    ssm: jnp.ndarray     # (L, B, nh, N, P)
+    k: jnp.ndarray       # (G, B, S_max, H_kv, hd)
+    v: jnp.ndarray
+    length: jnp.ndarray  # scalar int32
+
+
+def n_shared_invocations(cfg: ModelConfig) -> int:
+    return max(1, cfg.n_layers // max(1, cfg.shared_attn_every))
+
+
+def init_params(cfg: ModelConfig, rng) -> Dict:
+    k1, k2, k3, k4, k5 = jax.random.split(rng, 5)
+    rngs = jax.random.split(k2, cfg.n_layers)
+    return {
+        "embed": {"tok": L.embed_init(k1, (cfg.vocab, cfg.d_model),
+                                      L.pdtype_of(cfg)),
+                  "final_norm": L.norm_params(cfg, k5),
+                  "lm_head": L.dense_init(k4, (cfg.d_model, cfg.vocab),
+                                          L.pdtype_of(cfg))},
+        "mamba": jax.vmap(lambda r: M.mamba2_params(cfg, r))(rngs),
+        "shared": {"ln1": L.norm_params(cfg, k3),
+                   "attn": L.attn_params(cfg, k3),
+                   "ln2": L.norm_params(cfg, k3),
+                   "mlp": L.mlp_params(cfg, k3)},
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> HybridCache:
+    din, N, P, K = (cfg.d_inner, cfg.ssm_state, cfg.ssm_head_dim,
+                    cfg.ssm_conv)
+    nh = din // P
+    G = n_shared_invocations(cfg)
+    dt = L.dtype_of(cfg)
+    return HybridCache(
+        conv=jnp.zeros((cfg.n_layers, batch, K - 1, din), dt),
+        ssm=jnp.zeros((cfg.n_layers, batch, nh, N, P), jnp.float32),
+        k=jnp.zeros((G, batch, max_len, cfg.n_kv_heads, cfg.hd), dt),
+        v=jnp.zeros((G, batch, max_len, cfg.n_kv_heads, cfg.hd), dt),
+        length=jnp.int32(0))
+
+
+def _shared_block_full(cfg: ModelConfig, p: Dict, x, positions):
+    norm = L.make_norm(cfg)
+    h = norm(x, p["ln1"])
+    q, k, v = L.qkv_proj(cfg, p["attn"], h)
+    q = L.apply_rope(q, positions, cfg.rope_theta, cfg.rope_frac)
+    k = L.apply_rope(k, positions, cfg.rope_theta, cfg.rope_frac)
+    o = L.attention(q, k, v, causal=True)
+    x = x + jnp.einsum("bqx,xd->bqd", o.reshape(*o.shape[:2], -1),
+                       p["attn"]["wo"])
+    h = norm(x, p["ln2"])
+    return x + L.mlp_apply(cfg, p["mlp"], h), (k, v)
+
+
+def _shared_block_decode(cfg: ModelConfig, p: Dict, x, pos, kc, vc):
+    norm = L.make_norm(cfg)
+    B = x.shape[0]
+    h = norm(x, p["ln1"])
+    q, k, v = L.qkv_proj(cfg, p["attn"], h)
+    posb = jnp.full((B, 1), pos, jnp.int32)
+    q = L.apply_rope(q, posb, cfg.rope_theta, cfg.rope_frac)
+    k = L.apply_rope(k, posb, cfg.rope_theta, cfg.rope_frac)
+    kc = jax.lax.dynamic_update_slice(kc, k, (0, pos, 0, 0))
+    vc = jax.lax.dynamic_update_slice(vc, v, (0, pos, 0, 0))
+    o = L.attention(q, kc, vc, causal=False, kv_len=pos + 1)
+    x = x + jnp.einsum("bqx,xd->bqd", o.reshape(B, 1, -1), p["attn"]["wo"])
+    h = norm(x, p["ln2"])
+    return x + L.mlp_apply(cfg, p["mlp"], h), kc, vc
+
+
+def _group_slices(params_mamba: Dict, g: int, k: int) -> Dict:
+    return jax.tree.map(lambda a: a[g * k:(g + 1) * k], params_mamba)
+
+
+def forward_full(cfg: ModelConfig, params: Dict, batch: Dict,
+                 collect_cache: bool = False, max_len: Optional[int] = None,
+                 remat: bool = True):
+    tokens = batch["tokens"]
+    x = params["embed"]["tok"][tokens].astype(L.dtype_of(cfg))
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    k_every = max(1, cfg.shared_attn_every)
+    G = n_shared_invocations(cfg)
+    max_len = max_len or S
+    kvs = []
+
+    def mamba_body(x, p):
+        return M.mamba2_full(cfg, p, x), None
+
+    def mamba_body_state(x, p):
+        x, (cs, ss) = M.mamba2_full(cfg, p, x, return_state=True)
+        return x, (cs, ss)
+
+    if remat:
+        mamba_body = jax.checkpoint(mamba_body)
+    states = []
+    for g in range(G):
+        sl = _group_slices(params["mamba"], g, k_every)
+        if collect_cache:
+            x, (cs, ss) = jax.lax.scan(mamba_body_state, x, sl)
+            states.append((cs, ss))
+        else:
+            x, _ = jax.lax.scan(mamba_body, x, sl)
+        x, (k, v) = _shared_block_full(cfg, params["shared"], x, positions)
+        if collect_cache:
+            if max_len > S:
+                pad = [(0, 0), (0, max_len - S), (0, 0), (0, 0)]
+                k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+            kvs.append((k, v))
+
+    norm = L.make_norm(cfg)
+    x = norm(x, params["embed"]["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x,
+                        params["embed"]["lm_head"].astype(x.dtype))
+    cache = None
+    if collect_cache:
+        ks = jnp.stack([k for k, _ in kvs])
+        vs = jnp.stack([v for _, v in kvs])
+        conv = jnp.concatenate([cs for cs, _ in states])
+        ssm = jnp.concatenate([ss for _, ss in states])
+        cache = HybridCache(conv=conv, ssm=ssm, k=ks, v=vs,
+                            length=jnp.int32(S))
+    return logits, cache
+
+
+def forward_decode(cfg: ModelConfig, params: Dict, tokens: jnp.ndarray,
+                   cache: HybridCache):
+    x = params["embed"]["tok"][tokens].astype(L.dtype_of(cfg))
+    pos = cache.length
+    k_every = max(1, cfg.shared_attn_every)
+    G = n_shared_invocations(cfg)
+
+    def mamba_body(x, inp):
+        p, cs, ss = inp
+        x, cs, ss = M.mamba2_decode(cfg, p, x, cs, ss)
+        return x, (cs, ss)
+
+    new_conv, new_ssm, new_k, new_v = [], [], [], []
+    for g in range(G):
+        sl = slice(g * k_every, (g + 1) * k_every)
+        x, (cs, ss) = jax.lax.scan(
+            mamba_body, x, (_group_slices(params["mamba"], g, k_every),
+                            cache.conv[sl], cache.ssm[sl]))
+        new_conv.append(cs)
+        new_ssm.append(ss)
+        x, kc, vc = _shared_block_decode(cfg, params["shared"], x, pos,
+                                         cache.k[g], cache.v[g])
+        new_k.append(kc)
+        new_v.append(vc)
+
+    norm = L.make_norm(cfg)
+    x = norm(x, params["embed"]["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x,
+                        params["embed"]["lm_head"].astype(x.dtype))
+    return logits, HybridCache(
+        conv=jnp.concatenate(new_conv), ssm=jnp.concatenate(new_ssm),
+        k=jnp.stack(new_k), v=jnp.stack(new_v), length=pos + 1)

@@ -1,0 +1,321 @@
+"""Mamba1 (falcon-mamba) and Mamba2/SSD (zamba2 hybrid) blocks.
+
+Chunked formulations keep the (B, S, d_inner, N) state tensors bounded:
+full sequences are processed chunk-by-chunk with ``lax.scan`` carrying the
+recurrent state across chunks; inside a chunk Mamba1 uses an associative
+scan and Mamba2 the quadratic-within-chunk SSD form.  Decode is the O(1)
+recurrence.
+
+Simplifications vs the reference implementations (noted in DESIGN.md):
+falcon-mamba's extra RMS norms on B/C/dt are folded away; mamba2's short
+conv is applied to the x branch only; n_groups = 1.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+
+class SSMCache(NamedTuple):
+    conv: jnp.ndarray   # (L, B, K-1, d_inner[ +2N for mamba2])
+    ssm: jnp.ndarray    # (L, B, d_inner, N) | (L, B, nh, hd, N)
+
+
+# =============================================================================
+# Mamba1
+# =============================================================================
+
+def mamba1_params(cfg: ModelConfig, rng) -> Dict:
+    D, din, N, R, K = (cfg.d_model, cfg.d_inner, cfg.ssm_state,
+                       cfg.dt_rank_, cfg.ssm_conv)
+    pd = L.pdtype_of(cfg)
+    ks = jax.random.split(rng, 6)
+    return {
+        "ln": L.norm_params(cfg, ks[0]),
+        "in_proj": L.dense_init(ks[1], (D, 2 * din), pd),
+        "conv_w": L.dense_init(ks[2], (K, din), pd, scale=1.0),
+        "conv_b": jnp.zeros((din,), pd),
+        "x_proj": L.dense_init(ks[3], (din, R + 2 * N), pd),
+        "dt_proj": L.dense_init(ks[4], (R, din), pd),
+        "dt_bias": jnp.full((din,), -4.6, pd),  # softplus^-1(0.01)
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, N + 1, dtype=jnp.float32), (din, N))).astype(jnp.float32),
+        "Dskip": jnp.ones((din,), pd),
+        "out_proj": L.dense_init(ks[5], (din, D), pd),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Depthwise causal conv; x: (B, S, C), w: (K, C).  ``state``: (B, K-1, C)
+    left context (decode), else zero-padded."""
+    K = w.shape[0]
+    left = state if state is not None else jnp.zeros(
+        (x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([left, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    return out + b
+
+
+def mamba1_full(cfg: ModelConfig, p: Dict, x: jnp.ndarray,
+                return_state: bool = False):
+    """x: (B, S, D) -> (B, S, D). Chunked selective scan.
+    ``return_state``: also return (conv_state, ssm_state) for decode."""
+    from repro.models.opt_flags import FLAGS
+    B, S, D = x.shape
+    din, N, R = cfg.d_inner, cfg.ssm_state, cfg.dt_rank_
+    C = FLAGS.mamba_chunk_override or cfg.ssm_chunk
+    scan_dt = jnp.bfloat16 if FLAGS.mamba_bf16_scan else jnp.float32
+    h0 = jnp.zeros((B, din, N), jnp.float32)
+
+    res = L.rmsnorm(x, p["ln"]["w"]) if cfg.norm == "rmsnorm" else x
+    xz = jnp.einsum("bsd,de->bse", res, p["in_proj"])
+    xin, z = jnp.split(xz, 2, axis=-1)
+    u = jax.nn.silu(_causal_conv(xin, p["conv_w"], p["conv_b"])
+                    .astype(jnp.float32)).astype(x.dtype)
+
+    dbc = jnp.einsum("bsi,ie->bse", u, p["x_proj"])
+    dt_r, Bc, Cc = jnp.split(dbc, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,ri->bsi", dt_r, p["dt_proj"]).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))                       # (B,S,din)
+    A = -jnp.exp(p["A_log"])                                      # (din,N)
+
+    if FLAGS.mamba_seq_scan:
+        # sequential time recurrence (hillclimb 2.2): one step per token,
+        # carry h (B, din, N); residual = the dA/dBu sequences only.
+        def step(h, inp):
+            u_t, dt_t, b_t, c_t = inp
+            dA = jnp.exp(dt_t[..., None] * A)
+            h = dA * h + (dt_t * u_t.astype(jnp.float32))[..., None] \
+                * b_t.astype(jnp.float32)[:, None, :]
+            y = jnp.sum(h * c_t.astype(jnp.float32)[:, None, :], axis=-1)
+            return h, y  # keep f32: a bf16 ys buffer makes XLA shadow-
+            #              convert the WHOLE stack every step (§Perf 2.2)
+
+        # f32 xs too: bf16 xs make the BACKWARD's stacked cotangent
+        # buffers dtype-mismatch and shadow-convert per step
+        sw = lambda t: jnp.swapaxes(t.astype(jnp.float32), 0, 1)
+        h_last, ys = jax.lax.scan(step, h0, (sw(u), sw(dt), sw(Bc), sw(Cc)))
+        y = jnp.swapaxes(ys, 0, 1).astype(x.dtype)
+        y = y + u * p["Dskip"].astype(x.dtype)
+        y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+        out = x + jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+        if return_state:
+            K = cfg.ssm_conv
+            conv_state = xin[:, S - (K - 1):S] if S >= K - 1 else jnp.pad(
+                xin, [(0, 0), (K - 1 - S, 0), (0, 0)])
+            return out, (conv_state, h_last)
+        return out
+
+    # pad S to a multiple of the chunk size and scan over chunks; padded
+    # positions get dt=0 => dA=1, dBu=0 (identity on the carried state)
+    pad = (-S) % C
+    def padS(t):
+        return jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+    up, dtp, Bp, Cp = padS(u), padS(dt), padS(Bc), padS(Cc)
+    if pad:
+        valid = (jnp.arange(S + pad) < S)[None, :, None]
+        dtp = jnp.where(valid, dtp, 0.0)
+    nck = (S + pad) // C
+
+    def chunk(h, inp):
+        uc, dtc, bc, cc = inp                                # (B,C,...)
+        dA = jnp.exp(dtc[..., None] * A).astype(scan_dt)     # (B,C,din,N)
+        dBu = ((dtc * uc.astype(jnp.float32))[..., None]
+               * bc.astype(jnp.float32)[:, :, None, :]).astype(scan_dt)
+
+        def comb(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, b1 * a2 + b2
+
+        a_cum, b_cum = jax.lax.associative_scan(comb, (dA, dBu), axis=1)
+        hs = b_cum + a_cum * h[:, None].astype(scan_dt)      # (B,C,din,N)
+        y = jnp.einsum("bcin,bcn->bci", hs, cc.astype(scan_dt))
+        return hs[:, -1].astype(jnp.float32), y.astype(x.dtype)
+
+    reshp = lambda t: t.reshape(B, nck, C, *t.shape[2:]).swapaxes(0, 1)
+    h_last, ys = jax.lax.scan(chunk, h0, (reshp(up), reshp(dtp), reshp(Bp),
+                                          reshp(Cp)))
+    y = ys.swapaxes(0, 1).reshape(B, S + pad, din)[:, :S]
+    y = y + u * p["Dskip"].astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = x + jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    if return_state:
+        K = cfg.ssm_conv
+        conv_state = xin[:, S - (K - 1):S] if S >= K - 1 else jnp.pad(
+            xin, [(0, 0), (K - 1 - S, 0), (0, 0)])
+        # NOTE: with padding the last-chunk carry includes padded zeros'
+        # decay only (dt=0 -> dA=1, dBu=0), so h_last is exact.
+        return out, (conv_state, h_last)
+    return out
+
+
+def mamba1_decode(cfg: ModelConfig, p: Dict, x: jnp.ndarray,
+                  conv_state: jnp.ndarray, ssm_state: jnp.ndarray):
+    """x: (B, 1, D); conv_state: (B, K-1, din); ssm_state: (B, din, N)."""
+    B = x.shape[0]
+    N, R = cfg.ssm_state, cfg.dt_rank_
+    res = L.rmsnorm(x, p["ln"]["w"]) if cfg.norm == "rmsnorm" else x
+    xz = jnp.einsum("bsd,de->bse", res, p["in_proj"])
+    xin, z = jnp.split(xz, 2, axis=-1)
+    u = jax.nn.silu(_causal_conv(xin, p["conv_w"], p["conv_b"], conv_state)
+                    .astype(jnp.float32)).astype(x.dtype)
+    conv_state = jnp.concatenate([conv_state[:, 1:], xin], axis=1)
+
+    dbc = jnp.einsum("bsi,ie->bse", u, p["x_proj"])
+    dt_r, Bc, Cc = jnp.split(dbc, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,ri->bsi", dt_r, p["dt_proj"]).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))[:, 0]            # (B,din)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt[..., None] * A)                          # (B,din,N)
+    dBu = (dt * u[:, 0].astype(jnp.float32))[..., None] \
+        * Bc[:, 0].astype(jnp.float32)[:, None, :]
+    h = dA * ssm_state + dBu
+    y = jnp.einsum("bin,bn->bi", h, Cc[:, 0].astype(jnp.float32))
+    y = y.astype(x.dtype)[:, None, :] + u * p["Dskip"].astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    return x + jnp.einsum("bsi,id->bsd", y, p["out_proj"]), conv_state, h
+
+
+# =============================================================================
+# Mamba2 (SSD)
+# =============================================================================
+
+def mamba2_params(cfg: ModelConfig, rng) -> Dict:
+    """The reference fused in_proj (D, 2*din+2N+nh) is decomposed into a
+    shard-aligned zx projection plus small B/C/dt projections: identical
+    math/params, but the big matmul output splits exactly at the tensor-
+    parallel shard boundary (DESIGN.md §6)."""
+    D, din, N, K = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    nh = din // cfg.ssm_head_dim
+    pd = L.pdtype_of(cfg)
+    ks = jax.random.split(rng, 5)
+    return {
+        "ln": L.norm_params(cfg, ks[0]),
+        "zx_proj": L.dense_init(ks[1], (D, 2 * din), pd),
+        "bc_proj": L.dense_init(ks[2], (D, 2 * N), pd),
+        "dtp": L.dense_init(ks[4], (D, nh), pd),
+        "conv_w": L.dense_init(ks[2], (K, din), pd),
+        "conv_b": jnp.zeros((din,), pd),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "dt_bias": jnp.full((nh,), -4.6, jnp.float32),
+        "Dskip": jnp.ones((nh,), pd),
+        "out_proj": L.dense_init(ks[3], (din, D), pd),
+    }
+
+
+def _mamba2_proj(p: Dict, res: jnp.ndarray):
+    zx = jnp.einsum("bsd,de->bse", res, p["zx_proj"])
+    z, xin = jnp.split(zx, 2, axis=-1)
+    bc = jnp.einsum("bsd,de->bse", res, p["bc_proj"])
+    Bc, Cc = jnp.split(bc, 2, axis=-1)
+    dt_r = jnp.einsum("bsd,de->bse", res, p["dtp"])
+    return z, xin, Bc, Cc, dt_r
+
+
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., C) -> (..., C, C) lower-tri cumulative sums: out[i,j] =
+    sum_{k=j+1..i} x[k] for i >= j, -inf above the diagonal."""
+    C = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    i = jax.lax.broadcasted_iota(jnp.int32, (C, C), 0)
+    j = jax.lax.broadcasted_iota(jnp.int32, (C, C), 1)
+    return jnp.where(i >= j, diff, -jnp.inf)
+
+
+def mamba2_full(cfg: ModelConfig, p: Dict, x: jnp.ndarray,
+                return_state: bool = False):
+    B, S, D = x.shape
+    din, N, C = cfg.d_inner, cfg.ssm_state, cfg.ssm_chunk
+    P = cfg.ssm_head_dim
+    nh = din // P
+
+    res = L.rmsnorm(x, p["ln"]["w"]) if cfg.norm == "rmsnorm" else x
+    z, xin, Bc, Cc, dt_r = _mamba2_proj(p, res)
+    u = jax.nn.silu(_causal_conv(xin, p["conv_w"], p["conv_b"])
+                    .astype(jnp.float32)).astype(x.dtype)
+    dt = jax.nn.softplus(dt_r.astype(jnp.float32) + p["dt_bias"])  # (B,S,nh)
+    A = -jnp.exp(p["A_log"])                                       # (nh,)
+    dA = dt * A                                                    # (B,S,nh)
+
+    pad = (-S) % C
+    def padS(t):
+        return jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+    dtpad, dApad = padS(dt), padS(dA)
+    if pad:
+        valid = (jnp.arange(S + pad) < S)[None, :, None]
+        dtpad = jnp.where(valid, dtpad, 0.0)   # identity on padded steps
+        dApad = jnp.where(valid, dApad, 0.0)
+    up = padS(u).reshape(B, -1, C, nh, P)
+    dtp = dtpad.reshape(B, -1, C, nh)
+    dAp = dApad.reshape(B, -1, C, nh)
+    Bp = padS(Bc).reshape(B, -1, C, N)
+    Cp = padS(Cc).reshape(B, -1, C, N)
+    nck = up.shape[1]
+
+    def chunk(h, inp):                    # h: (B, nh, N, P) f32
+        uc, dtc, dac, bc, cc = inp        # (B,C,nh,P) (B,C,nh) (B,C,nh) (B,C,N)
+        cum = jnp.cumsum(dac, axis=1)                         # (B,C,nh)
+        Lmat = jnp.exp(_segsum(dac.swapaxes(1, 2)))           # (B,nh,C,C)
+        cb = jnp.einsum("bin,bjn->bij", cc.astype(jnp.float32),
+                        bc.astype(jnp.float32))               # (B,C,C)
+        du = dtc[..., None] * uc.astype(jnp.float32)          # (B,C,nh,P)
+        y_diag = jnp.einsum("bhij,bij,bjhp->bihp", Lmat, cb, du)
+        # contribution of the carried-in state
+        y_off = jnp.einsum("bin,bhnp,bih->bihp", cc.astype(jnp.float32), h,
+                           jnp.exp(cum))
+        # new carry
+        decay_to_end = jnp.exp(cum[:, -1:, :] - cum)          # (B,C,nh)
+        h_new = jnp.exp(cum[:, -1])[..., None, None] * h + jnp.einsum(
+            "bjn,bjh,bjhp->bhnp", bc.astype(jnp.float32), decay_to_end, du)
+        return h_new, (y_diag + y_off).astype(x.dtype)
+
+    h0 = jnp.zeros((B, nh, N, P), jnp.float32)
+    sw = lambda t: t.swapaxes(0, 1)
+    h_last, ys = jax.lax.scan(chunk, h0,
+                              (sw(up), sw(dtp), sw(dAp), sw(Bp), sw(Cp)))
+    y = ys.swapaxes(0, 1).reshape(B, S + pad, din)[:, :S]
+    y = y + (padS(u).reshape(B, -1, nh, P)[:, :S]
+             * p["Dskip"].astype(x.dtype)[None, None, :, None]).reshape(B, S, din)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = x + jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    if return_state:
+        K = cfg.ssm_conv
+        conv_state = xin[:, S - (K - 1):S] if S >= K - 1 else jnp.pad(
+            xin, [(0, 0), (K - 1 - S, 0), (0, 0)])
+        return out, (conv_state, h_last)
+    return out
+
+
+def mamba2_decode(cfg: ModelConfig, p: Dict, x: jnp.ndarray,
+                  conv_state: jnp.ndarray, ssm_state: jnp.ndarray):
+    """x: (B,1,D); conv_state: (B,K-1,din); ssm_state: (B,nh,N,P)."""
+    B = x.shape[0]
+    din, N, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_head_dim
+    nh = din // P
+    res = L.rmsnorm(x, p["ln"]["w"]) if cfg.norm == "rmsnorm" else x
+    z, xin, Bc, Cc, dt_r = _mamba2_proj(p, res)
+    u = jax.nn.silu(_causal_conv(xin, p["conv_w"], p["conv_b"], conv_state)
+                    .astype(jnp.float32)).astype(x.dtype)
+    conv_state = jnp.concatenate([conv_state[:, 1:], xin], axis=1)
+    dt = jax.nn.softplus(dt_r.astype(jnp.float32) + p["dt_bias"])[:, 0]  # (B,nh)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A)                                                 # (B,nh)
+    uh = u[:, 0].reshape(B, nh, P).astype(jnp.float32)
+    h = dA[..., None, None] * ssm_state + jnp.einsum(
+        "bn,bh,bhp->bhnp", Bc[:, 0].astype(jnp.float32), dt, uh)
+    y = jnp.einsum("bn,bhnp->bhp", Cc[:, 0].astype(jnp.float32), h)
+    y = (y + uh * p["Dskip"].astype(jnp.float32)[None, :, None])
+    y = y.reshape(B, 1, din).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    return x + jnp.einsum("bsi,id->bsd", y, p["out_proj"]), conv_state, h

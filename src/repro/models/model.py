@@ -1,0 +1,206 @@
+"""Unified model API across all families.
+
+``build(cfg)`` returns a ``ModelAPI`` with pure functions:
+  init(rng) -> params
+  loss(params, batch) -> (scalar loss, metrics dict)
+  prefill(params, batch, max_len) -> (logits, cache)
+  decode(params, tokens, cache) -> (logits, cache)
+  init_cache(batch_size, max_len) -> zeroed cache (fresh-decode dry-run)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, hybrid
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray):
+    """fp32 CE with ignore_index = -1.  logits (B,S,V), labels (B,S)."""
+    lf = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(lf, axis=-1, keepdims=True))
+    logz = m[..., 0] + jnp.log(jnp.sum(jnp.exp(lf - m), axis=-1))
+    safe = jnp.maximum(labels, 0)
+    ll = jnp.take_along_axis(lf, safe[..., None], axis=-1)[..., 0] - logz
+    mask = (labels >= 0).astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return -jnp.sum(ll * mask) / denom
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    cfg: ModelConfig
+    init: Callable[[Any], Dict]
+    loss: Callable[[Dict, Dict], Any]
+    prefill: Callable[..., Any]
+    decode: Callable[..., Any]
+    init_cache: Callable[..., Any]
+
+
+# ----------------------------------------------------------------------------
+# pure-SSM stack (falcon-mamba)
+# ----------------------------------------------------------------------------
+
+def _ssm_init(cfg: ModelConfig, rng) -> Dict:
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    rngs = jax.random.split(k2, cfg.n_layers)
+    return {"embed": {"tok": L.embed_init(k1, (cfg.vocab, cfg.d_model),
+                                          L.pdtype_of(cfg)),
+                      "final_norm": L.norm_params(cfg, k3),
+                      "lm_head": L.dense_init(k4, (cfg.d_model, cfg.vocab),
+                                              L.pdtype_of(cfg))},
+            "blocks": jax.vmap(lambda r: M.mamba1_params(cfg, r))(rngs)}
+
+
+def _ssm_logits(cfg, params, x):
+    norm = L.make_norm(cfg)
+    x = norm(x, params["embed"]["final_norm"])
+    return jnp.einsum("bsd,dv->bsv", x,
+                      params["embed"]["lm_head"].astype(x.dtype))
+
+
+def _ssm_forward_train(cfg, params, batch, remat: bool = True):
+    x = params["embed"]["tok"][batch["tokens"]].astype(L.dtype_of(cfg))
+
+    def body(x, p):
+        return M.mamba1_full(cfg, p, x), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    return _ssm_logits(cfg, params, x), jnp.float32(0.0)
+
+
+def _ssm_prefill(cfg, params, batch, max_len=None):
+    x = params["embed"]["tok"][batch["tokens"]].astype(L.dtype_of(cfg))
+
+    def body(x, p):
+        x, (cs, ss) = M.mamba1_full(cfg, p, x, return_state=True)
+        return x, (cs, ss)
+
+    x, (convs, ssms) = jax.lax.scan(body, x, params["blocks"])
+    logits = _ssm_logits(cfg, params, x[:, -1:])
+    cache = M.SSMCache(conv=convs, ssm=ssms)
+    return logits, cache
+
+
+def _ssm_decode(cfg, params, tokens, cache: M.SSMCache):
+    x = params["embed"]["tok"][tokens].astype(L.dtype_of(cfg))
+
+    def body(x, inp):
+        p, cs, ss = inp
+        x, cs, ss = M.mamba1_decode(cfg, p, x, cs, ss)
+        return x, (cs, ss)
+
+    x, (convs, ssms) = jax.lax.scan(body, x,
+                                    (params["blocks"], cache.conv, cache.ssm))
+    return _ssm_logits(cfg, params, x), M.SSMCache(conv=convs, ssm=ssms)
+
+
+def _ssm_init_cache(cfg, batch: int, max_len: int) -> M.SSMCache:
+    return M.SSMCache(
+        conv=jnp.zeros((cfg.n_layers, batch, cfg.ssm_conv - 1, cfg.d_inner),
+                       L.dtype_of(cfg)),
+        ssm=jnp.zeros((cfg.n_layers, batch, cfg.d_inner, cfg.ssm_state),
+                      jnp.float32))
+
+
+# ----------------------------------------------------------------------------
+# dispatcher
+# ----------------------------------------------------------------------------
+
+def build(cfg: ModelConfig) -> ModelAPI:
+    fam = cfg.family
+
+    if fam in ("dense", "vlm", "moe"):
+        def loss(params, batch):
+            logits, aux = T.forward_train(cfg, params, batch)
+            ce = cross_entropy(logits, batch["labels"])
+            return ce + aux, {"ce": ce, "aux": aux}
+
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda rng: T.init_params(cfg, rng),
+            loss=loss,
+            prefill=lambda params, batch, max_len=None: T.forward_prefill(
+                cfg, params, batch, max_len=max_len),
+            decode=lambda params, tokens, cache: T.forward_decode(
+                cfg, params, tokens, cache),
+            init_cache=lambda batch, max_len: T.init_kv_cache(
+                cfg, batch, max_len))
+
+    if fam == "ssm":
+        def loss(params, batch):
+            logits, aux = _ssm_forward_train(cfg, params, batch)
+            ce = cross_entropy(logits, batch["labels"])
+            return ce + aux, {"ce": ce, "aux": aux}
+
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda rng: _ssm_init(cfg, rng),
+            loss=loss,
+            prefill=lambda params, batch, max_len=None: _ssm_prefill(
+                cfg, params, batch, max_len),
+            decode=lambda params, tokens, cache: _ssm_decode(
+                cfg, params, tokens, cache),
+            init_cache=lambda batch, max_len: _ssm_init_cache(
+                cfg, batch, max_len))
+
+    if fam == "hybrid":
+        def loss(params, batch):
+            logits, _ = hybrid.forward_full(cfg, params, batch)
+            ce = cross_entropy(logits, batch["labels"])
+            return ce, {"ce": ce}
+
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda rng: hybrid.init_params(cfg, rng),
+            loss=loss,
+            prefill=lambda params, batch, max_len=None: _hybrid_prefill(
+                cfg, params, batch, max_len),
+            decode=lambda params, tokens, cache: hybrid.forward_decode(
+                cfg, params, tokens, cache),
+            init_cache=lambda batch, max_len: hybrid.init_cache(
+                cfg, batch, max_len))
+
+    if fam == "encdec":
+        def loss(params, batch):
+            logits, _ = encdec.forward_train(cfg, params, batch)
+            ce = cross_entropy(logits, batch["labels"])
+            return ce, {"ce": ce}
+
+        def init_cache(batch, max_len):
+            enc_len = encdec.enc_len_for(cfg, max_len)
+            z = jnp.zeros((cfg.n_layers, batch, max_len, cfg.n_kv_heads,
+                           cfg.hd), L.dtype_of(cfg))
+            xz = jnp.zeros((cfg.n_layers, batch, enc_len, cfg.n_kv_heads,
+                            cfg.hd), L.dtype_of(cfg))
+            return encdec.EncDecCache(z, z, xz, xz, jnp.int32(0))
+
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda rng: encdec.init_params(cfg, rng),
+            loss=loss,
+            prefill=lambda params, batch, max_len=None: encdec.forward_prefill(
+                cfg, params, batch, max_len),
+            decode=lambda params, tokens, cache: encdec.forward_decode(
+                cfg, params, tokens, cache),
+            init_cache=init_cache)
+
+    raise ValueError(f"unknown family {fam!r}")
+
+
+def _hybrid_prefill(cfg, params, batch, max_len=None):
+    S = batch["tokens"].shape[1]
+    logits, cache = hybrid.forward_full(cfg, params, batch,
+                                        collect_cache=True,
+                                        max_len=max_len or S)
+    return logits[:, -1:], cache

@@ -1,0 +1,134 @@
+"""Mixture-of-Experts layer: top-k routing with capacity-bounded dispatch.
+
+Dispatch uses a scatter into a per-expert buffer of shape (E, C, D) — the
+expert axis shards over the mesh "model" axis (expert parallelism); GSPMD
+lowers the scatter/gather into all-to-all-style collectives.  For the 1T
+config the expert FFN dim additionally shards over "data"
+(2-D expert sharding, DESIGN.md §6).
+
+Aux loss: Switch-style load-balance loss (mean fraction × mean router prob
+per expert, scaled by E).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+
+def _constrain(x, logical):
+    """Hillclimb 3 (EXPERIMENTS.md §Perf): pin MoE dispatch shardings so
+    GSPMD keeps dispatch buffers expert-sharded and token tensors
+    data-sharded instead of all-gathering per layer.  "data_batch" maps
+    to ("data",)/(("pod","data")) depending on the mesh axes present."""
+    from repro.models.opt_flags import FLAGS
+    if not FLAGS.moe_local_dispatch:
+        return x
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    def resolve(ax):
+        if ax != "data_batch":
+            return ax
+        try:
+            mesh = jax.sharding.get_abstract_mesh()
+            if mesh is not None and "pod" in mesh.axis_names:
+                return ("pod", "data")
+        except Exception:  # noqa: BLE001
+            pass
+        return "data"
+
+    try:
+        return jax.lax.with_sharding_constraint(
+            x, P(*[resolve(a) for a in logical]))
+    except (ValueError, RuntimeError):
+        return x  # no mesh (plain CPU tests)
+
+
+def moe_params(cfg: ModelConfig, rng) -> Dict:
+    D, F, E, pd = cfg.d_model, cfg.moe_d_ff, cfg.n_experts, L.pdtype_of(cfg)
+    ks = jax.random.split(rng, 5)
+    p = {"router": L.dense_init(ks[0], (D, E), jnp.float32),
+         "w_gate": L.dense_init(ks[1], (E, D, F), pd),
+         "w_up": L.dense_init(ks[2], (E, D, F), pd),
+         "w_down": L.dense_init(ks[3], (E, F, D), pd)}
+    if cfg.n_shared_experts:
+        p["shared"] = L.mlp_params(cfg, ks[4],
+                                   d_ff=cfg.moe_d_ff * cfg.n_shared_experts)
+    return p
+
+
+def _capacity(cfg: ModelConfig, n_tokens: int, decode: bool) -> int:
+    """Capacity per expert.  Decode uses a higher factor (drops at decode
+    hurt generation quality) and is exactly dropless when the batch is
+    small enough that C would reach T*K anyway."""
+    cf = 4.0 if decode else cfg.capacity_factor
+    c = int(n_tokens * cfg.experts_per_tok * cf / cfg.n_experts)
+    c = max(4, -(-c // 4) * 4)  # round up to a multiple of 4
+    return min(c, n_tokens * cfg.experts_per_tok)
+
+
+def moe_apply(cfg: ModelConfig, p: Dict, x: jnp.ndarray,
+              decode: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> (B, S, D), aux_loss (f32 scalar)."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.experts_per_tok
+    T = B * S
+    C = _capacity(cfg, T, decode)
+    xf = x.reshape(T, D)
+
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, eidx = jax.lax.top_k(probs, K)           # (T, K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    # position of each (token, k) within its expert's capacity buffer:
+    # rank = #earlier (token', k') routed to the same expert.
+    flat_e = eidx.reshape(-1)                            # (T*K,)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # (T*K, E)
+    ranks = jnp.cumsum(onehot, axis=0) - onehot          # exclusive cumsum
+    pos = jnp.take_along_axis(ranks, flat_e[:, None], axis=1)[:, 0]  # (T*K,)
+    keep = pos < C
+
+    # scatter tokens into (E, C, D)
+    buf = jnp.zeros((E, C, D), x.dtype)
+    src = jnp.repeat(xf, K, axis=0)                      # (T*K, D)
+    safe_pos = jnp.where(keep, pos, 0)
+    src = _constrain(src, ("data_batch", None))
+    buf = buf.at[flat_e, safe_pos].add(
+        jnp.where(keep[:, None], src, 0), mode="drop")
+    buf = _constrain(buf, ("model", None, None))
+
+    # expert FFN on the buffers
+    if cfg.act == "swiglu":
+        g = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])
+        u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    else:
+        h = jax.nn.gelu(
+            jnp.einsum("ecd,edf->ecf", buf, p["w_up"]).astype(jnp.float32)
+        ).astype(x.dtype)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+    out_buf = _constrain(out_buf, ("model", None, None))
+
+    # gather back and combine with gates
+    gathered = out_buf[flat_e, safe_pos]                 # (T*K, D)
+    gathered = _constrain(gathered, ("data_batch", None))
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    gates = gate_vals.reshape(-1).astype(x.dtype)
+    y = jnp.sum((gathered * gates[:, None]).reshape(T, K, D), axis=1)
+
+    if cfg.n_shared_experts:
+        y = y + L.mlp_apply(cfg, p["shared"], xf)
+
+    # Switch load-balance aux loss
+    frac = jnp.mean(jax.nn.one_hot(eidx[:, 0], E, dtype=jnp.float32), axis=0)
+    pmean = jnp.mean(probs, axis=0)
+    aux = jnp.float32(E) * jnp.sum(frac * pmean) * cfg.router_aux_coef
+
+    return y.reshape(B, S, D), aux

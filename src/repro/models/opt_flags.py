@@ -1,0 +1,51 @@
+"""Beyond-baseline optimization flags (EXPERIMENTS.md §Perf hillclimbs).
+
+The paper-faithful/default lowering is flags-all-off; the dry-run's
+``--variant opt`` turns on the per-cell winners.  Module-level so model
+code can consult them without threading knobs through every signature.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+
+
+@dataclasses.dataclass
+class OptFlags:
+    # decode (hillclimb 1): compute attention scores against the
+    # S-sharded KV cache locally (partial softmax + small all-reduces)
+    # instead of letting GSPMD all-gather the cache per layer.
+    decode_shard_scores: bool = False
+    decode_seq_axis: str = "model"
+    # decode (hillclimb 1b): append new tokens into a small replicated
+    # ring buffer; merge base+buffer attention by online softmax; commit
+    # to the sharded base cache every R steps (amortized).
+    decode_buffered: bool = False
+    decode_buffer_len: int = 256
+    # mamba (hillclimb 2): run the chunked selective scan in bf16 and
+    # with a smaller chunk (lower log-depth traffic).  REFUTED — see
+    # EXPERIMENTS.md §Perf iteration 2.1.
+    mamba_bf16_scan: bool = False
+    mamba_chunk_override: int = 0
+    # mamba (hillclimb 2, iteration 2.2): sequential time scan — the
+    # linear-recurrence transpose needs only the dA sequence as residual,
+    # eliminating the associative scan's log-depth materializations.
+    mamba_seq_scan: bool = False
+    # moe (hillclimb 3): keep dispatch/combine token-sharded (constrain
+    # intermediate shardings) to avoid all-gathering dispatch tensors.
+    moe_local_dispatch: bool = False
+
+
+FLAGS = OptFlags()
+
+
+@contextlib.contextmanager
+def use_flags(**kw):
+    global FLAGS
+    old = FLAGS
+    FLAGS = dataclasses.replace(FLAGS, **kw)
+    try:
+        yield FLAGS
+    finally:
+        FLAGS = old

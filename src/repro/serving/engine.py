@@ -1,0 +1,152 @@
+"""Serving runtime: continuous batching over the Clock2Q+-paged KV pool.
+
+Flow per request:
+  admit -> prefix-cache lookup (shared full blocks hit; correlated
+  references!) -> prefill only the blocks that missed -> decode loop with
+  paged attention (block-table gather) -> release (blocks stay cached,
+  unpinned, for future prefix hits).
+
+Under HBM pressure the Clock2Q+ policy evicts cold blocks to the host
+tier; dirty (HBM-only) blocks are flushed by the watermark flusher before
+they become evictable, exactly as §4.1.3 prescribes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kvcache.manager import PagedKVManager
+from repro.kvcache.pool import BlockPool
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.models.model import ModelAPI
+
+
+@dataclasses.dataclass
+class Request:
+    req_id: int
+    prompt: List[int]
+    max_new: int = 16
+
+
+@dataclasses.dataclass
+class Completion:
+    req_id: int
+    tokens: List[int]
+
+
+class ServingEngine:
+    """Single-host engine for the dense/vlm/moe families (the paged-KV
+    families); greedy sampling."""
+
+    def __init__(self, api: ModelAPI, params, *, block_size: int = 16,
+                 hbm_blocks: int = 64, max_batch: int = 8,
+                 max_blocks_per_seq: int = 64):
+        assert api.cfg.family in ("dense", "vlm", "moe"), \
+            "paged serving targets the attention-KV families"
+        self.api = api
+        self.cfg = api.cfg
+        self.params = params
+        self.pool = BlockPool(api.cfg, hbm_blocks, block_size,
+                              dtype=jnp.dtype(api.cfg.dtype))
+        self.mgr = PagedKVManager(api.cfg, self.pool)
+        self.max_batch = max_batch
+        self.max_blocks = max_blocks_per_seq
+        self._decode_fn = jax.jit(
+            lambda params, toks, kp, vp, bt, lens, sid, soff:
+            T.forward_decode_paged(api.cfg, params, toks, kp, vp, bt, lens,
+                                   sid, soff))
+        # prompts are padded to block_size buckets so prefill compiles
+        # once per bucket, not once per prompt length
+        self._prefill_fn = jax.jit(
+            lambda params, batch: T.forward_prefill(api.cfg, params, batch,
+                                                    full_logits=True))
+
+    # -- prefill ------------------------------------------------------------------
+    def _prefill_into_pool(self, st, fill_blocks: List[int]) -> int:
+        """Run the dense prefill, write the missing blocks' KV, and return
+        the first generated token (greedy).  NOTE: prefix-cache hits avoid
+        block WRITES and deduplicate HBM (two sequences share physical
+        blocks); logits still require the full forward here — suffix-only
+        chunked prefill is future work."""
+        n_real = len(st.tokens)
+        pad = (-n_real) % self.pool.bs  # length bucketing (one compile
+        toks = list(st.tokens) + [0] * pad  # per bucket, not per length)
+        toks = jnp.asarray(toks, jnp.int32)[None]
+        logits, cache = self._prefill_fn(self.params, {"tokens": toks})
+        bs = self.pool.bs
+        k = cache.k[:, 0]  # (L, S, H, hd)
+        v = cache.v[:, 0]
+        for b in fill_blocks:
+            lo, hi = b * bs, min((b + 1) * bs, len(st.tokens))
+            kb = jnp.zeros((self.cfg.n_layers, bs, self.cfg.n_kv_heads,
+                            self.cfg.hd), k.dtype)
+            kb = kb.at[:, :hi - lo].set(k[:, lo:hi])
+            vb = jnp.zeros_like(kb)
+            vb = vb.at[:, :hi - lo].set(v[:, lo:hi])
+            self.pool.write_block(st.slots[b], kb, vb, key=st.block_keys[b])
+        return int(jnp.argmax(logits[0, n_real - 1]))
+
+    # -- main loop ------------------------------------------------------------------
+    def run(self, requests: List[Request]) -> List[Completion]:
+        pending = list(requests)
+        active: Dict[int, Request] = {}
+        done: List[Completion] = []
+        while pending or active:
+            # admit
+            while pending and len(active) < self.max_batch:
+                r = pending.pop(0)
+                st, fill = self.mgr.admit(r.req_id, r.prompt)
+                first = self._prefill_into_pool(st, fill)
+                st.out_tokens.append(first)  # from prefill logits
+                active[r.req_id] = r
+            for rid in [rid for rid, r in active.items()
+                        if len(self.mgr.seqs[rid].out_tokens) >= r.max_new]:
+                st = self.mgr.seqs[rid]
+                done.append(Completion(rid, list(st.out_tokens)))
+                self.mgr.release(rid)
+                del active[rid]
+            if not active:
+                continue
+            # one decode step for the whole active batch: each sequence's
+            # newest token (at position pos) writes its KV at pos and
+            # attends to [0, pos].
+            ids = sorted(active)
+            toks, poss, bts, sids, soffs = [], [], [], [], []
+            for rid in ids:
+                st = self.mgr.seqs[rid]
+                pos = st.length - 1       # position of the token processed
+                toks.append(st.out_tokens[-1])
+                poss.append(pos)
+                slot, off = self.mgr.slot_for_pos(rid, pos)
+                sids.append(slot)
+                soffs.append(off)
+                bts.append(self.mgr.block_table(rid, self.max_blocks))
+            # pad to max_batch (one compile for all batch sizes); padded
+            # rows duplicate the last row — they rewrite identical values
+            while len(toks) < self.max_batch:
+                toks.append(toks[-1])
+                poss.append(poss[-1])
+                sids.append(sids[-1])
+                soffs.append(soffs[-1])
+                bts.append(bts[-1])
+            logits, kp, vp = self._decode_fn(
+                self.params, jnp.asarray(toks, jnp.int32)[:, None],
+                self.pool.kpool, self.pool.vpool,
+                jnp.asarray(np.stack(bts)), jnp.asarray(poss, jnp.int32),
+                jnp.asarray(sids, jnp.int32), jnp.asarray(soffs, jnp.int32))
+            self.pool.kpool, self.pool.vpool = kp, vp
+            nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+            for i, rid in enumerate(ids):
+                self.mgr.seqs[rid].out_tokens.append(int(nxt[i]))
+            self.mgr.maintenance()
+        return done
+
+    @property
+    def stats(self):
+        return self.pool.stats, dict(self.pool.policy.flows)

@@ -1,0 +1,245 @@
+"""Sharding-rule engine: maps every parameter / activation / cache leaf to
+a PartitionSpec, with divisibility fallback (a dim that does not divide the
+mesh axis is replicated and the decision is recorded).
+
+Logical policy (DESIGN.md §6):
+  * batch dims        -> ("pod", "data") [multi-pod] or ("data",)
+  * TP ("model")      -> attention head projections, MLP hidden, expert
+                         axis of MoE weights, mamba d_inner, vocab.
+  * sequence dim of decode KV caches -> "model" (long caches divide
+    across the pod without replicating GQA heads).
+  * ZeRO-1: optimizer moments additionally sharded over "data" on the
+    first free divisible dim.
+  * 1T-class MoE: expert FFN dim additionally sharded over "data"
+    (2-D expert sharding) so per-device weights fit HBM.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+# params above this count get expert-FFN FSDP over "data"
+FSDP_EXPERT_THRESHOLD = 100_000_000_000
+
+
+class RuleLog:
+    """Records divisibility fallbacks for DESIGN.md / debugging."""
+
+    def __init__(self):
+        self.fallbacks: List[str] = []
+
+    def note(self, path: str, dim: int, size: int, axis: str, n: int):
+        self.fallbacks.append(
+            f"{path} dim{dim}={size} not divisible by {axis}({n}): replicated")
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def _fit(mesh: Mesh, path: str, shape: Tuple[int, ...], logical,
+         log: Optional[RuleLog]) -> P:
+    """Drop axes that do not divide their dim."""
+    out = []
+    for d, ax in enumerate(logical):
+        if ax is None:
+            out.append(None)
+            continue
+        n = _axis_size(mesh, ax)
+        if shape[d] % n == 0:
+            out.append(ax)
+        else:
+            if log is not None:
+                log.note(path, d, shape[d], str(ax), n)
+            out.append(None)
+    return P(*out)
+
+
+def batch_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+# ---------------------------------------------------------------------------
+# parameter rules
+# ---------------------------------------------------------------------------
+
+def _param_logical(cfg: ModelConfig, path: str, ndim: int,
+                   shape: Tuple[int, ...], mesh: Mesh) -> Tuple:
+    mp = "model"
+    leaf = path.split("/")[-1]
+    stacked = path.startswith(("blocks/", "mamba/", "enc/", "dec/"))
+    off = 1 if stacked else 0  # leading layer-stack dim
+
+    def L(*spec):
+        return (None,) * off + spec
+
+    fsdp_ff = (cfg.family == "moe"
+               and cfg.n_params() > FSDP_EXPERT_THRESHOLD)
+
+    if leaf in ("tok",):                       # (V, D)
+        return (mp, None)
+    if leaf in ("lm_head", "mm_proj"):         # (D, V) / (D, D)
+        return (None, mp)
+    if leaf in ("w", "b", "_"):                # norms
+        return (None,) * ndim
+    if leaf in ("wq", "wk", "wv"):             # (D, H*hd)
+        nh = cfg.n_kv_heads if leaf in ("wk", "wv") else cfg.n_heads
+        n = _axis_size(mesh, mp)
+        if nh % n == 0:
+            return L(None, mp)
+        return L(None, None)                   # replicate (GQA kv < mesh)
+    if leaf == "wo":                           # (H*hd, D)
+        n = _axis_size(mesh, mp)
+        return L(mp, None) if cfg.n_heads % n == 0 else L(None, None)
+    if leaf in ("bq", "bk", "bv"):
+        return L(None)
+    if leaf in ("w_gate", "w_up", "w_down"):
+        if ndim - off == 3:                    # MoE experts (E, D, F)/(E, F, D)
+            ff_ax = "data" if fsdp_ff else None
+            if leaf == "w_down":
+                return L(mp, ff_ax, None)
+            return L(mp, None, ff_ax)
+        if leaf == "w_down":                   # (F, D)
+            return L(mp, None)
+        return L(None, mp)                     # (D, F)
+    if leaf == "router":                       # (D, E)
+        return L(None, None)
+    # mamba1 / mamba2
+    if leaf in ("in_proj", "zx_proj"):         # (D, 2*din)
+        return L(None, mp)
+    if leaf in ("bc_proj", "dtp", "x_proj"):   # small projections
+        return L(None, None) if leaf != "x_proj" else L(mp, None)
+    if leaf == "dt_proj":                      # (R, din)
+        return L(None, mp)
+    if leaf == "conv_w":                       # (K, din)
+        return L(None, mp)
+    if leaf in ("conv_b", "dt_bias", "Dskip"): # (din,) or (nh,)
+        dim = shape[-1]
+        n = _axis_size(mesh, mp)
+        return L(mp) if dim % n == 0 and dim >= n else L(None)
+    if leaf == "A_log":
+        if ndim - off == 2:                    # mamba1 (din, N)
+            return L(mp, None)
+        return L(None)                         # mamba2 (nh,)
+    if leaf == "out_proj":                     # (din, D)
+        return L(mp, None)
+    return (None,) * ndim
+
+
+def _tree_paths(tree: Any, prefix: str = "") -> List[Tuple[str, Any]]:
+    out = []
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.extend(_tree_paths(tree[k], f"{prefix}{k}/"))
+    elif hasattr(tree, "_fields"):  # NamedTuple
+        for k in tree._fields:
+            out.extend(_tree_paths(getattr(tree, k), f"{prefix}{k}/"))
+    else:
+        out.append((prefix[:-1], tree))
+    return out
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh, params_shape: Any,
+                log: Optional[RuleLog] = None) -> Any:
+    """params_shape: pytree of ShapeDtypeStruct (from jax.eval_shape)."""
+
+    def build(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: build(v, f"{prefix}{k}/") for k, v in tree.items()}
+        path = prefix[:-1]
+        logical = _param_logical(cfg, path, len(tree.shape), tree.shape, mesh)
+        return _fit(mesh, path, tree.shape, logical, log)
+
+    return build(params_shape)
+
+
+def opt_state_specs(cfg: ModelConfig, mesh: Mesh, params_shape: Any,
+                    pspecs: Any, log: Optional[RuleLog] = None) -> Any:
+    """ZeRO-1: moments get "data" added on the first free divisible dim."""
+    n_data = _axis_size(mesh, "data")
+
+    def build(shape_leaf, spec: P):
+        spec_t = tuple(spec) + (None,) * (len(shape_leaf.shape) - len(tuple(spec)))
+        used = set()
+        for ax in spec_t:
+            if isinstance(ax, tuple):
+                used.update(ax)
+            elif ax is not None:
+                used.add(ax)
+        if "data" in used:  # e.g. 2-D expert sharding already uses it
+            return P(*spec_t)
+        out = list(spec_t)
+        for d, ax in enumerate(spec_t):
+            if ax is None and shape_leaf.shape[d] % n_data == 0 \
+                    and shape_leaf.shape[d] >= n_data:
+                out[d] = "data"
+                break
+        return P(*out)
+
+    return jax.tree.map(build, params_shape, pspecs)
+
+
+# ---------------------------------------------------------------------------
+# activation / batch / cache rules
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh, batch_shapes: Dict[str, tuple],
+                log: Optional[RuleLog] = None) -> Dict[str, P]:
+    """Shard batch dims over ("pod","data"); everything else replicated."""
+    bax = batch_axes(mesh)
+    out = {}
+    for name, (shape, _) in batch_shapes.items():
+        logical = (bax,) + (None,) * (len(shape) - 1)
+        out[name] = _fit(mesh, f"batch/{name}", shape, logical, log)
+    return out
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, cache_shape: Any,
+                log: Optional[RuleLog] = None) -> Any:
+    """KV caches: (L, B, S, H_kv, hd) -> (None, batch, "model", None, None);
+    SSM states: shard d_inner / heads over "model"."""
+    bax = batch_axes(mesh)
+
+    def build(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: build(v, f"{prefix}{k}/") for k, v in tree.items()}
+        if hasattr(tree, "_fields"):
+            return type(tree)(*[build(getattr(tree, k), f"{prefix}{k}/")
+                                for k in tree._fields])
+        path = prefix[:-1]
+        shape = tree.shape
+        leaf = path.split("/")[-1]
+        if leaf in ("bk", "bv") and len(shape) == 5:
+            # decode append ring (hillclimb 1b): replicated along S
+            logical = (None, bax, None, None, None)
+        elif leaf in ("k", "v", "xk", "xv") and len(shape) == 5:
+            # shard the sequence dim: (L,B,S,H,hd) or head-major
+            # (L,B,H,S,hd) — S is the larger of dims 2/3
+            if shape[3] > shape[2]:
+                logical = (None, bax, None, "model", None)
+            else:
+                logical = (None, bax, "model", None, None)
+        elif leaf == "conv":                      # (L, B, K-1, din)
+            logical = (None, bax, None, "model")
+        elif leaf == "ssm":
+            if len(shape) == 4:                   # mamba1 (L, B, din, N)
+                logical = (None, bax, "model", None)
+            else:                                 # mamba2 (L, B, nh, N, P)
+                logical = (None, bax, "model", None, None)
+        elif leaf == "length" or len(shape) == 0:
+            return P()
+        else:
+            logical = (None,) * len(shape)
+        return _fit(mesh, path, shape, logical, log)
+
+    return build(cache_shape)

@@ -1,0 +1,95 @@
+"""train_step / serve_step factories.
+
+``make_train_step`` builds a pure (state, batch) -> (state, metrics) step:
+grad-accumulation microbatches via lax.scan (XLA overlaps per-microbatch
+reduce-scatters with the next microbatch's compute), global-norm clipping,
+AdamW.  ``make_prefill_step`` / ``make_decode_step`` build the serving
+steps lowered by the dry-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import ModelAPI
+from repro.training import optim
+
+
+@dataclasses.dataclass(frozen=True)
+class RunConfig:
+    microbatches: int = 1
+    adamw: optim.AdamWConfig = dataclasses.field(
+        default_factory=optim.AdamWConfig)
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: optim.OptState
+
+
+def init_train_state(api: ModelAPI, rng, oc: optim.AdamWConfig) -> TrainState:
+    params = api.init(rng)
+    return TrainState(params=params, opt=optim.init_opt_state(params, oc))
+
+
+def abstract_train_state(api: ModelAPI, oc: optim.AdamWConfig):
+    """Shape-only TrainState (no allocation) for dry-run lowering."""
+    return jax.eval_shape(
+        lambda r: init_train_state(api, r, oc), jax.random.PRNGKey(0))
+
+
+def make_train_step(api: ModelAPI, rc: RunConfig):
+    oc = rc.adamw
+
+    def loss_fn(params, batch):
+        loss, metrics = api.loss(params, batch)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def step(state: TrainState, batch: Dict) -> Tuple[TrainState, Dict]:
+        if rc.microbatches > 1:
+            def reshape(x):
+                b = x.shape[0]
+                mb = rc.microbatches
+                return x.reshape(mb, b // mb, *x.shape[1:])
+
+            micro = jax.tree.map(reshape, batch)
+
+            def accum(carry, mb):
+                (l, g) = carry
+                (li, _), gi = grad_fn(state.params, mb)
+                return (l + li, jax.tree.map(jnp.add, g, gi)), None
+
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (loss, grads), _ = jax.lax.scan(
+                accum, (jnp.float32(0.0), zero_g), micro)
+            inv = 1.0 / rc.microbatches
+            loss = loss * inv
+            grads = jax.tree.map(lambda g: g * inv, grads)
+        else:
+            (loss, _), grads = grad_fn(state.params, batch)
+
+        new_params, new_opt, om = optim.adamw_update(
+            state.params, grads, state.opt, oc)
+        metrics = {"loss": loss, **om}
+        return TrainState(new_params, new_opt), metrics
+
+    return step
+
+
+def make_prefill_step(api: ModelAPI, max_len: Optional[int] = None):
+    def step(params, batch):
+        return api.prefill(params, batch, max_len=max_len)
+    return step
+
+
+def make_decode_step(api: ModelAPI):
+    def step(params, tokens, cache):
+        return api.decode(params, tokens, cache)
+    return step

@@ -1,0 +1,63 @@
+"""Regression tests for the loop-aware HLO cost model that all roofline
+numbers depend on (EXPERIMENTS.md §Dry-run)."""
+
+import subprocess
+import sys
+from pathlib import Path
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.launch import hlo_cost
+
+D, L, B = 512, 8, 64
+W = jnp.zeros((L, D, D), jnp.bfloat16)
+x = jnp.zeros((B, D), jnp.bfloat16)
+
+def scanned(W, x):
+    def body(x, w):
+        return x @ w, None
+    return jax.lax.scan(body, x, W)[0]
+
+def unrolled(W, x):
+    for i in range(L):
+        x = x @ W[i]
+    return x
+
+exp = 2 * B * D * D * L
+for fn in (scanned, unrolled):
+    r = hlo_cost.analyze(jax.jit(fn).lower(W, x).compile().as_text())
+    assert abs(r["flops"] - exp) / exp < 0.01, (fn.__name__, r["flops"], exp)
+
+# sharded: per-device flops + collectives inside loops multiplied by trips
+mesh = jax.make_mesh((2, 2), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+def loss(W, x):
+    def body(c, w):
+        return jax.nn.relu(c @ w), None
+    c, _ = jax.lax.scan(body, x, W)
+    return jnp.sum(c.astype(jnp.float32))
+with jax.set_mesh(mesh):
+    j = jax.jit(loss,
+                in_shardings=(NamedSharding(mesh, P(None, None, "model")),
+                              NamedSharding(mesh, P("data", None))),
+                out_shardings=NamedSharding(mesh, P()))
+    r = hlo_cost.analyze(j.lower(W, x).compile().as_text())
+assert abs(r["flops"] - exp / 4) / (exp / 4) < 0.01, r["flops"]
+ag = r["collectives"]["all-gather"]
+assert ag["count"] == L, ag  # one all-gather per scan iteration, x L trips
+print("HLO_COST_OK")
+"""
+
+
+def test_loop_aware_cost_model():
+    r = subprocess.run([sys.executable, "-c", SCRIPT],
+                       env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin",
+                            "HOME": "/root"},
+                       capture_output=True, text=True, timeout=300)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "HLO_COST_OK" in r.stdout

@@ -1,0 +1,95 @@
+"""Per-kernel shape/dtype sweeps, assert_allclose against the ref.py
+pure-jnp oracles (interpret=True executes the kernel bodies on CPU)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.cache_sim.ops import simulate_lanes
+from repro.kernels.cache_sim.ref import cache_sim_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.mamba_scan.ops import mamba_scan
+from repro.kernels.mamba_scan.ref import mamba_scan_ref
+from repro.kernels.paged_attention.ops import paged_attention
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+RNG = np.random.default_rng(0)
+
+
+def _randn(shape, dtype):
+    return jnp.asarray(RNG.normal(0, 1, shape), dtype)
+
+
+@pytest.mark.parametrize("B,S,H,Hkv,hd,causal", [
+    (2, 128, 4, 2, 64, True),
+    (1, 256, 2, 2, 128, False),
+    (2, 96, 4, 1, 80, True),      # ragged blocks + padded head_dim + MQA
+    (1, 64, 2, 2, 32, True),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(B, S, H, Hkv, hd, causal, dtype):
+    q, k, v = (_randn((B, S, H, hd), dtype),
+               _randn((B, S, Hkv, hd), dtype),
+               _randn((B, S, Hkv, hd), dtype))
+    o = flash_attention(q, k, v, causal=causal, block_q=64, block_kv=64,
+                        interpret=True)
+    kr = jnp.repeat(k, H // Hkv, axis=2)
+    vr = jnp.repeat(v, H // Hkv, axis=2)
+    qb = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kb = kr.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    vb = vr.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    ref = attention_ref(qb, kb, vb, causal=causal).reshape(
+        B, H, S, hd).transpose(0, 2, 1, 3)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("B,H,Hkv,d,N,bs,nb", [
+    (3, 4, 2, 64, 16, 8, 4),
+    (2, 8, 8, 128, 32, 16, 3),
+    (1, 4, 1, 32, 8, 4, 2),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_attention(B, H, Hkv, d, N, bs, nb, dtype):
+    q = _randn((B, H, d), dtype)
+    kp = _randn((N, bs, Hkv, d), dtype)
+    vp = _randn((N, bs, Hkv, d), dtype)
+    bt = jnp.asarray(RNG.choice(N, size=(B, nb)), jnp.int32)
+    lens = jnp.asarray(RNG.integers(1, nb * bs + 1, size=(B,)), jnp.int32)
+    o = paged_attention(q, kp, vp, bt, lens, interpret=True)
+    ref = paged_attention_ref(q, kp, vp, bt, lens)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("B,S,din,N,db,ck", [
+    (2, 64, 128, 16, 64, 32),
+    (1, 100, 96, 8, 32, 32),     # ragged chunk tail
+    (2, 32, 64, 4, 64, 16),
+])
+def test_mamba_scan(B, S, din, N, db, ck):
+    u = _randn((B, S, din), jnp.float32)
+    dt = jnp.abs(_randn((B, S, din), jnp.float32)) * 0.1
+    Bc = _randn((B, S, N), jnp.float32)
+    Cc = _randn((B, S, N), jnp.float32)
+    Al = _randn((din, N), jnp.float32) * 0.5
+    y = mamba_scan(u, dt, Bc, Cc, Al, d_block=db, chunk=ck, interpret=True)
+    ref = mamba_scan_ref(u, dt, Bc, Cc, Al)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), atol=1e-4)
+
+
+@pytest.mark.parametrize("cap,T,L,U", [(40, 600, 4, 200), (24, 400, 8, 80)])
+def test_cache_sim_bit_exact(cap, T, L, U):
+    traces = np.stack([
+        np.concatenate([RNG.integers(0, U, T // 2),
+                        np.arange(T // 2) % max(2, U // 2)])
+        for _ in range(L)])
+    RNG.shuffle(traces, axis=1)
+    mr, hits = simulate_lanes(traces, cap, interpret=True)
+    ref = cache_sim_ref(traces, cap)
+    assert (np.asarray(hits) == ref.astype(np.int32)).all()

@@ -1,0 +1,89 @@
+"""Per-architecture smoke tests (reduced configs, CPU): one forward/train
+step with shape + finiteness checks, and prefill+decode consistency
+against the full forward."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, reduced
+from repro.launch.specs import make_batch
+from repro.models.config import SHAPES, ShapeCell, cell_applicable
+from repro.models.model import build
+
+CELL = ShapeCell("smoke", 32, 2, "train")
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch):
+    cfg = reduced(get_config(arch))
+    api = build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, CELL, seed=1)
+    loss, metrics = jax.jit(api.loss)(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), arch
+    grads = jax.grad(lambda p: api.loss(p, batch)[0])(params)
+    gnorm = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0, arch
+
+
+@pytest.mark.parametrize("arch", ["granite-3-8b", "olmoe-1b-7b",
+                                  "falcon-mamba-7b", "zamba2-2.7b",
+                                  "whisper-tiny", "llava-next-mistral-7b"])
+def test_prefill_decode_consistency(arch):
+    cfg = reduced(get_config(arch))
+    if cfg.family == "moe":
+        cfg = dataclasses.replace(cfg, capacity_factor=64.0)  # dropless
+    api = build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    B, S = 2, 16
+    batch = make_batch(cfg, ShapeCell("p", S, B, "prefill"), seed=3)
+    extra = jnp.ones((B, 1), jnp.int32) * 7
+    full = dict(batch, tokens=jnp.concatenate([batch["tokens"], extra], 1))
+    if cfg.family == "encdec":
+        from repro.models import encdec
+        ref, _ = encdec.forward_train(cfg, params, full, remat=False)
+    elif cfg.family == "hybrid":
+        from repro.models import hybrid
+        ref, _ = hybrid.forward_full(cfg, params, full, remat=False)
+    elif cfg.family == "ssm":
+        from repro.models.model import _ssm_forward_train
+        ref, _ = _ssm_forward_train(cfg, params, full, remat=False)
+    else:
+        from repro.models import transformer as T
+        ref, _ = T.forward_train(cfg, params, full, remat=False)
+    lp, cache = api.prefill(params, batch, max_len=S + 4)
+    ld, _ = api.decode(params, extra, cache)
+    scale = float(jnp.max(jnp.abs(ref[:, -1]))) + 1e-9
+    assert float(jnp.max(jnp.abs(ref[:, -1] - ld[:, 0]))) / scale < 2e-4
+    assert float(jnp.max(jnp.abs(ref[:, S - 1] - lp[:, -1]))) / scale < 2e-4
+
+
+def test_vlm_patch_positions_are_masked():
+    cfg = reduced(get_config("llava-next-mistral-7b"))
+    batch = make_batch(cfg, CELL, seed=0)
+    P = batch["patch_embeds"].shape[1]
+    assert (np.asarray(batch["labels"])[:, :P] == -1).all()
+
+
+def test_param_counts_match_analytic():
+    """init() leaf totals must agree with the analytic n_params() used for
+    MODEL_FLOPS in the roofline."""
+    for arch in ("granite-3-8b", "olmoe-1b-7b", "falcon-mamba-7b"):
+        cfg = reduced(get_config(arch))
+        api = build(cfg)
+        shapes = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+        total = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(shapes))
+        analytic = cfg.n_params()
+        # analytic formula ignores norms/biases/router-bias etc: within 5%
+        assert abs(total - analytic) / total < 0.05, (arch, total, analytic)
+
+
+def test_long500k_applicability_rules():
+    skips = {a: cell_applicable(get_config(a), SHAPES[3]) for a in ARCH_IDS}
+    runs = [a for a, s in skips.items() if s is None]
+    assert sorted(runs) == ["falcon-mamba-7b", "zamba2-2.7b"]

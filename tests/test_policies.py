@@ -1,0 +1,158 @@
+"""Unit tests for the reference policy zoo (the paper's algorithm +
+baselines)."""
+
+import numpy as np
+import pytest
+
+from repro.core import make_policy, policy_names, stats
+
+
+def run_trace(pol, trace):
+    return [pol.access(k) for k in trace]
+
+
+ALL = [p for p in policy_names() if p != "belady"]
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_capacity_never_exceeded(name):
+    pol = make_policy(name, 10)
+    rng = np.random.default_rng(0)
+    for k in rng.integers(0, 100, 2000):
+        pol.access(int(k))
+        assert len(pol) <= 10
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_repeat_single_key_hits(name):
+    pol = make_policy(name, 4)
+    assert pol.access(7) is False
+    for _ in range(10):
+        assert pol.access(7) is True
+
+
+def test_lru_exactness():
+    pol = make_policy("lru", 3)
+    seq = [1, 2, 3, 1, 4, 2]
+    # classic: after 1,2,3 -> access 1 (hit), 4 evicts 2, access 2 miss
+    got = run_trace(pol, seq)
+    assert got == [False, False, False, True, False, False]
+
+
+def test_clock_second_chance():
+    pol = make_policy("clock", 2)
+    assert pol.access(1) is False
+    assert pol.access(2) is False
+    assert pol.access(1) is True   # ref bit set on 1
+    assert pol.access(3) is False  # evicts 2 (1 gets second chance)
+    assert pol.access(1) is True
+    assert pol.access(2) is False
+
+
+def test_belady_is_lower_bound():
+    rng = np.random.default_rng(1)
+    trace = list(rng.integers(0, 60, 3000))
+    opt = stats.simulate("belady", trace, 20)
+    for name in ("lru", "clock", "s3fifo", "clock2q+", "arc", "2q"):
+        r = stats.simulate(name, trace, 20)
+        assert r.misses >= opt.misses, name
+
+
+def test_2q_small_fifo_hits_do_nothing():
+    # a block hit while in A1in must still be evicted FIFO-order
+    pol = make_policy("2q", 8, small_frac=0.5)  # small cap 4
+    for k in (1, 2, 3, 4):
+        pol.access(k)
+    assert pol.access(1) is True        # hit in A1in: no promotion
+    pol.access(5)                       # evicts 1 -> ghost
+    assert 1 not in pol
+    assert pol.access(1) is False       # ghost hit -> promoted to main
+    assert 1 in pol
+
+
+def test_s3fifo_bits_promotion_threshold():
+    # 2-bit: one re-reference is NOT enough to enter the main queue
+    for bits, hit_after in ((1, True), (2, False)):
+        pol = make_policy("s3fifo", 20, bits=bits)  # small cap 2
+        pol.access(100)
+        pol.access(100)               # 1 re-reference
+        pol.access(101)
+        pol.access(102)               # 100 evicted from small
+        resident = 100 in pol
+        assert resident == hit_after, f"bits={bits}"
+
+
+def test_clock2qplus_correlation_window_filters_bursts():
+    """Correlated burst while inside the window must NOT set the ref bit;
+    a later re-reference after aging past the window must."""
+    pol = make_policy("clock2q+", 40)  # small=4, window=2
+    pol.access(7)
+    pol.access(7)   # age 0 < 2: no ref
+    pol.access(7)
+    pol.access(8)
+    pol.access(9)   # 7 aged 2 now
+    burst_key_in_small = 7 in pol
+    assert burst_key_in_small
+    # evict 7: insert 2 more new keys -> small (cap 4) displaces 7
+    pol.access(10)
+    pol.access(11)
+    assert 7 not in pol, "burst-only block must be demoted to ghost"
+    # now a block that is re-referenced AFTER the window
+    pol2 = make_policy("clock2q+", 40)
+    pol2.access(7)
+    pol2.access(8)
+    pol2.access(9)   # 7 now aged 2 == window
+    pol2.access(7)   # sets ref
+    pol2.access(10)
+    pol2.access(11)  # 7 evicted from small -> promoted to MAIN
+    assert 7 in pol2, "post-window re-reference must promote"
+
+
+def test_clock2qplus_flow_counters():
+    pol = make_policy("clock2q+", 30)
+    rng = np.random.default_rng(3)
+    for k in rng.integers(0, 100, 3000):
+        pol.access(int(k))
+    f = pol.flows
+    assert f["small_to_ghost"] > 0
+    assert f["ghost_to_main"] > 0
+
+
+def test_dirty_simplified_never_evicts_dirty_from_small():
+    pol = make_policy("clock2q+", 30, dirty_mode="simplified")
+    pol.access(1, dirty=True)
+    for k in range(2, 20):
+        pol.access(k)
+    assert 1 in pol, "dirty block must be skipped by small-FIFO eviction"
+
+
+def test_dirty_accurate_promotes_refset_dirty():
+    pol = make_policy("clock2q+", 40, dirty_mode="accurate")
+    pol.access(1, dirty=True)
+    pol.access(2)
+    pol.access(3)     # age(1) = 2 = window
+    pol.access(1)     # sets ref
+    for k in range(4, 10):
+        pol.access(k)
+    assert 1 in pol
+
+
+def test_skip_limit_forces_eviction():
+    pol = make_policy("clock2q+", 40, skip_limit=1)
+    rng = np.random.default_rng(4)
+    for k in rng.integers(0, 60, 4000):
+        pol.access(int(k))
+    assert max(pol.main.skipped_per_eviction or [0]) <= 36
+
+
+def test_ghost_ring_tombstone_semantics():
+    from repro.core.policies.two_q import _GhostFIFO
+    g = _GhostFIFO(3)
+    g.push(1)
+    g.push(2)
+    g.remove(1)        # promoted: tombstone
+    g.push(3)
+    g.push(4)          # ring holds (2,3,4); 1's slot was reclaimed
+    assert 1 not in g and 2 in g and 3 in g and 4 in g
+    g.push(5)          # wraps: 2 falls off
+    assert 2 not in g and 5 in g

@@ -1,0 +1,116 @@
+"""Production array-implementation tests (paper §4): parity, pinning,
+DOING-IO, dirty handling, live resize, and the Fig.-6 race protocol."""
+
+import numpy as np
+import pytest
+
+from repro.core import make_policy
+from repro.core.prodcache import EMPTY, ProdClock2QPlus
+
+
+def test_parity_with_reference():
+    rng = np.random.default_rng(0)
+    T = 5000
+    tr = np.empty(T, np.int64)
+    tr[0::2] = rng.integers(0, 400, T // 2)
+    tr[1::2] = np.arange(T // 2) % 700
+    prod = ProdClock2QPlus(60)
+    ref = make_policy("clock2q+", 60, dirty_mode="simplified")
+    for k in tr:
+        assert prod.access(int(k)).hit == ref.access(int(k))
+
+
+def test_no_allocation_after_init():
+    prod = ProdClock2QPlus(50)
+    before = (prod.key.ctypes.data, prod.buckets.ctypes.data,
+              prod.gkey.ctypes.data)
+    rng = np.random.default_rng(1)
+    for k in rng.integers(0, 500, 5000):
+        prod.access(int(k))
+    after = (prod.key.ctypes.data, prod.buckets.ctypes.data,
+             prod.gkey.ctypes.data)
+    assert before == after  # arrays never reallocated
+
+
+def test_pinned_blocks_never_evicted():
+    prod = ProdClock2QPlus(20)
+    prod.access(999, pin=True)
+    rng = np.random.default_rng(2)
+    for k in rng.integers(0, 200, 3000):
+        prod.access(int(k))
+    assert prod.contains(999)
+    prod.unpin(999)
+    for k in rng.integers(200, 400, 3000):
+        prod.access(int(k))
+    assert not prod.contains(999)
+
+
+def test_doing_io_waits_counted():
+    prod = ProdClock2QPlus(20, track_io=True)
+    prod.access(5)             # miss -> DOING-IO
+    r = prod.access(5)         # second accessor waits on the entry
+    assert r.hit and r.io_pending
+    assert prod.io_waits == 1
+    prod.io_done(5)
+    assert not prod.access(5).io_pending
+
+
+def test_dirty_blocks_survive_pressure_until_clean():
+    prod = ProdClock2QPlus(20)
+    prod.access(7, dirty=True)
+    rng = np.random.default_rng(3)
+    for k in rng.integers(10, 300, 2000):
+        prod.access(int(k))
+    assert prod.contains(7)      # skipped by both queues' eviction scans
+    prod.clean(7)
+    for k in rng.integers(300, 600, 2000):
+        prod.access(int(k))
+    assert not prod.contains(7)
+
+
+def test_eviction_callback_reports_payload():
+    prod = ProdClock2QPlus(4)
+    seen = {}
+    for k in range(20):
+        r = prod.access(k)
+        if r.evicted_key != EMPTY:
+            seen[r.evicted_key] = r.evicted_block
+    assert seen  # evictions happened and reported (key, payload) pairs
+
+
+def test_resize_grow_then_shrink_under_load():
+    prod = ProdClock2QPlus(24, max_capacity=120)
+    rng = np.random.default_rng(4)
+    for k in rng.integers(0, 400, 1500):
+        prod.access(int(k))
+    prod.begin_resize(100)
+    for k in rng.integers(0, 400, 1500):
+        prod.access(int(k))
+        prod.resize_step(4)
+    assert prod.capacity == 100
+    prod.begin_resize(16)
+    for k in rng.integers(0, 400, 1500):
+        prod.access(int(k))
+        prod.resize_step(4)
+    for _ in range(500):
+        if prod.resize_step(128):
+            break
+    assert len(prod) <= prod.small_cap + prod.main_cap
+
+
+def test_fig6_race_stray_migration():
+    """The paper's lookup/insert race (Fig. 6) maps to the resize
+    protocol's stray handling: a key hashed in the OLD bucket array is
+    invisible to plain lookup but MUST be found+migrated by the insertion
+    path so the retry succeeds (§4.2.1)."""
+    prod = ProdClock2QPlus(16, max_capacity=64)
+    for _ in range(4):          # cycle keys into the Main Clock via ghost
+        for k in range(6):
+            prod.access(k)
+    key = next(k for k in range(6) if prod.contains(k))
+    prod.begin_resize(60)       # new bucket array; entries still in old
+    # no resize_step yet: the key is a stray in the old location
+    assert prod._hash_lookup(key) == EMPTY    # plain lookup: false negative
+    r = prod.access(key)                       # insertion path migrates
+    assert r.hit                               # ... and the retry succeeds
+    assert prod._hash_lookup(key) != EMPTY     # now in the new location

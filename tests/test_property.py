@@ -1,0 +1,92 @@
+"""Property-based tests (hypothesis) for the cache substrate's invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import make_policy, policy_names
+from repro.core.prodcache import ProdClock2QPlus
+
+POLICIES = [p for p in policy_names() if p != "belady"]
+
+trace_strategy = st.lists(st.integers(min_value=0, max_value=120),
+                          min_size=1, max_size=400)
+cap_strategy = st.integers(min_value=2, max_value=50)
+
+
+@settings(max_examples=25, deadline=None)
+@given(trace=trace_strategy, cap=cap_strategy)
+def test_all_policies_core_invariants(trace, cap):
+    for name in POLICIES:
+        pol = make_policy(name, cap)
+        resident = set()
+        for k in trace:
+            hit = pol.access(k)
+            # a hit requires residency; a miss means it was absent
+            assert hit == (k in resident)
+            # rebuild residency from the policy's own view
+            resident = {x for x in resident if x in pol}
+            if k in pol:
+                resident.add(k)
+            assert len(pol) <= cap
+
+
+@settings(max_examples=15, deadline=None)
+@given(trace=st.lists(st.integers(min_value=0, max_value=90),
+                      min_size=10, max_size=300),
+       cap=st.integers(min_value=4, max_value=40),
+       seed=st.integers(min_value=0, max_value=5))
+def test_prodcache_matches_reference(trace, cap, seed):
+    prod = ProdClock2QPlus(cap)
+    ref = make_policy("clock2q+", cap, dirty_mode="simplified")
+    for i, k in enumerate(trace):
+        ref.clock_time = i
+        assert prod.access(k).hit == ref.access(k)
+
+
+@settings(max_examples=10, deadline=None)
+@given(trace=st.lists(st.integers(min_value=0, max_value=60),
+                      min_size=10, max_size=200),
+       cap=st.integers(min_value=4, max_value=30))
+def test_prodcache_payload_handles_unique(trace, cap):
+    """Every resident key owns exactly one payload block; no block is
+    owned twice (allocator correctness under churn)."""
+    prod = ProdClock2QPlus(cap)
+    for k in trace:
+        prod.access(k)
+        live = prod.block[prod.key != -1]
+        assert len(set(live.tolist())) == len(live)
+        free = set(prod.free_blocks)
+        assert free.isdisjoint(set(live.tolist()))
+
+
+@settings(max_examples=8, deadline=None)
+@given(data=st.data())
+def test_prodcache_live_resize_preserves_hits(data):
+    """Resizing mid-stream must never corrupt lookups: any key the cache
+    claims resident must be found again immediately."""
+    cap = data.draw(st.integers(min_value=8, max_value=24))
+    prod = ProdClock2QPlus(cap, max_capacity=96)
+    rng = np.random.default_rng(0)
+    for phase, new_cap in ((0, 80), (1, 12)):
+        prod.begin_resize(new_cap)
+        for k in rng.integers(0, 100, 300):
+            r = prod.access(int(k))
+            prod.resize_step(4)
+            assert prod.access(int(k)).hit  # immediate re-lookup must hit
+    while not prod.resize_step(512):
+        pass
+    assert len(prod) <= prod.small_cap + prod.main_cap
+
+
+@settings(max_examples=10, deadline=None)
+@given(trace=st.lists(st.integers(min_value=0, max_value=50),
+                      min_size=5, max_size=150))
+def test_oversized_window_never_promotes_from_small(trace):
+    """window > S: no resident block can age past it (a resident block's
+    age can reach exactly S, so window=S does NOT suffice — window=2S
+    does), giving Clock2Q behaviour (§3.2; jax_engine maps clock2q to
+    clock2q+ with window_frac=10)."""
+    pw = make_policy("clock2q+", 30, window_frac=2.0)
+    for k in trace:
+        pw.access(k)
+    assert pw.flows["small_to_main"] == 0

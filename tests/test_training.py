@@ -1,0 +1,124 @@
+"""Training-stack tests: loss descends, microbatch-accumulation
+equivalence, checkpoint roundtrip/resume, data pipeline determinism."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.ckpt import CheckpointManager
+from repro.configs import get_config, reduced
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.launch.specs import make_batch
+from repro.models.config import ShapeCell
+from repro.models.model import build
+from repro.training import optim, step as step_lib
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = reduced(get_config("olmo-1b"))
+    api = build(cfg)
+    return api
+
+
+def test_loss_decreases(tiny):
+    api = tiny
+    oc = optim.AdamWConfig(lr=3e-3, warmup_steps=1)
+    rc = step_lib.RunConfig(adamw=oc)
+    state = step_lib.init_train_state(api, jax.random.PRNGKey(0), oc)
+    step = jax.jit(step_lib.make_train_step(api, rc))
+    dc = DataConfig(vocab=api.cfg.vocab, seq_len=32, global_batch=4, seed=1)
+    pipe = TokenPipeline(dc)
+    losses = []
+    for i in range(12):
+        b = pipe.batch(i % 2)  # repeat 2 batches -> must overfit
+        state, m = step(state, {k: jnp.asarray(v) for k, v in b.items()})
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] * 0.9, losses
+
+
+def test_microbatch_accumulation_matches_full_batch(tiny):
+    api = tiny
+    oc = optim.AdamWConfig()
+    state = step_lib.init_train_state(api, jax.random.PRNGKey(0), oc)
+    batch = make_batch(api.cfg, ShapeCell("t", 32, 4, "train"), seed=5)
+    s1 = step_lib.make_train_step(api, step_lib.RunConfig(adamw=oc))
+    s4 = step_lib.make_train_step(
+        api, step_lib.RunConfig(microbatches=4, adamw=oc))
+    st1, m1 = jax.jit(s1)(state, batch)
+    st4, m4 = jax.jit(s4)(state, batch)
+    # same data -> same mean loss and same updated params (fp32 tolerance)
+    assert abs(float(m1["loss"]) - float(m4["loss"])) < 1e-4
+    d = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))),
+                     st1.params, st4.params)
+    assert max(jax.tree.leaves(d)) < 1e-4
+
+
+def test_checkpoint_roundtrip_and_resume(tiny, tmp_path):
+    api = tiny
+    oc = optim.AdamWConfig(lr=1e-3, warmup_steps=1)
+    rc = step_lib.RunConfig(adamw=oc)
+    state = step_lib.init_train_state(api, jax.random.PRNGKey(0), oc)
+    step = jax.jit(step_lib.make_train_step(api, rc))
+    batch = make_batch(api.cfg, ShapeCell("t", 32, 4, "train"), seed=5)
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for i in range(3):
+        state, _ = step(state, batch)
+    mgr.save(3, state, blocking=True)
+    state_a, _ = step(state, batch)
+    # restart: restore and take the same step -> identical params
+    like = jax.eval_shape(lambda: state)
+    restored = mgr.restore(None, like)
+    restored = jax.tree.map(jnp.asarray, restored)
+    state_b, _ = step(restored, batch)
+    diff = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(
+        a.astype(jnp.float32) - b.astype(jnp.float32)))),
+        state_a.params, state_b.params)
+    assert max(jax.tree.leaves(diff)) == 0.0
+    assert mgr.latest_step() == 3
+
+
+def test_checkpoint_retention_and_verify(tiny, tmp_path):
+    api = tiny
+    oc = optim.AdamWConfig()
+    state = step_lib.init_train_state(api, jax.random.PRNGKey(1), oc)
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3):
+        mgr.save(s, state, blocking=True)
+    assert mgr.all_steps() == [2, 3]
+    like = jax.eval_shape(lambda: state)
+    mgr.restore(2, like, verify=True)  # digest check passes
+
+
+def test_pipeline_determinism_and_index_cache():
+    dc = DataConfig(vocab=1000, seq_len=64, global_batch=8, seed=7)
+    p1 = TokenPipeline(dc)
+    p2 = TokenPipeline(dc)
+    b1 = p1.batch(5)
+    b2 = p2.batch(5)
+    assert (b1["tokens"] == b2["tokens"]).all()
+    assert (b1["labels"][:, :-1] == b1["tokens"][:, 1:]).all()
+    # correlated references on index blocks -> cache absorbs them
+    for s in range(30):
+        p1.batch(s)
+    assert p1.index_hit_ratio > 0.3
+
+
+def test_pipeline_elastic_host_slices():
+    dc = DataConfig(vocab=1000, seq_len=32, global_batch=8, seed=9)
+    whole = TokenPipeline(dc).batch(3)["tokens"]
+    h0 = TokenPipeline(dc, host_id=0, n_hosts=2).batch(3)["tokens"]
+    h1 = TokenPipeline(dc, host_id=1, n_hosts=2).batch(3)["tokens"]
+    assert (np.concatenate([h0, h1]) == whole).all()
+
+
+def test_grad_compression_roundtrip():
+    rng = jax.random.PRNGKey(0)
+    g = jax.random.normal(rng, (256, 64)) * 0.01
+    q, scale = optim.compress_int8(g, rng)
+    back = optim.decompress_int8(q, scale)
+    rel = float(jnp.linalg.norm(back - g) / jnp.linalg.norm(g))
+    assert q.dtype == jnp.int8 and rel < 0.02

@@ -14,7 +14,7 @@ import sys
 import time
 from pathlib import Path
 
-from benchmarks import paper_figs, perf
+from benchmarks import paper_figs, perf, shard
 
 BENCHES = [
     ("fig7", paper_figs.fig7_fidelity),
@@ -25,7 +25,10 @@ BENCHES = [
     ("fig12", paper_figs.fig12_skiplimit),
     ("fig13", paper_figs.fig13_window),
     ("fig14", paper_figs.fig14_nonblock),
+    ("fig_shard", shard.fig_shard_fidelity),
+    ("fig_shard_jax", shard.fig_shard_jax_fidelity),
     ("perf_cpu", perf.perf_cpu_overhead),
+    ("perf_shard_scalability", shard.perf_shard_scalability),
     ("perf_engine", perf.perf_jax_engine),
     ("perf_serving", perf.perf_serving),
     ("perf_train", perf.perf_train_step),

@@ -1,0 +1,80 @@
+"""Sharded-cache benchmarks: multi-thread replay throughput (the paper's
+multi-CPU scalability experiment, §5) and sharding fidelity (miss-ratio
+delta vs the unsharded cache at equal total capacity)."""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import jax_engine as je, traces
+from repro.core.traces import suite_capacity
+from repro.shardcache import (
+    ShardedClock2QPlus, scalability_sweep, unsharded_miss_ratio,
+)
+
+SHARD_COUNTS = (2, 4, 8)
+THREADS = (1, 2, 4, 8)
+
+
+def _bench_trace(spec, limit: int) -> np.ndarray:
+    tr = common.meta_trace(spec)
+    return tr if common.FULL else tr[:limit]
+
+
+def perf_shard_scalability() -> List[str]:
+    """Replay throughput of the 8-shard service at 1/2/4/8 worker threads
+    (fresh cache per thread count; wall-clock includes lock contention)."""
+    rows = []
+    spec = traces.SUITE[0]
+    tr = _bench_trace(spec, 200_000)
+    cap = suite_capacity(tr)
+    for r in scalability_sweep(tr, cap, n_shards=8, threads=THREADS):
+        rows.append(common.row(
+            f"perf/shard/{spec.name}/threads{r.n_threads}",
+            r.us_per_access, r.throughput))
+    return rows
+
+
+def fig_shard_fidelity() -> List[str]:
+    """Miss-ratio delta (percentage points) of the sharded service vs the
+    unsharded ProdClock2QPlus at equal total capacity, across the SUITE."""
+    rows = []
+    for spec in common.suite():
+        tr = _bench_trace(spec, 150_000)
+        cap = suite_capacity(tr)
+        t0 = time.perf_counter()
+        base = unsharded_miss_ratio(tr, cap)
+        us = 1e6 * (time.perf_counter() - t0) / len(tr)
+        rows.append(common.row(f"fig_shard/{spec.name}/shards1", us, base))
+        for n in SHARD_COUNTS:
+            sh = ShardedClock2QPlus(cap, n_shards=n)
+            t0 = time.perf_counter()
+            hits = sh.access_many(tr)
+            us = 1e6 * (time.perf_counter() - t0) / len(tr)
+            delta_pp = 100.0 * abs((1.0 - hits.mean()) - base)
+            rows.append(common.row(
+                f"fig_shard/{spec.name}/shards{n}/delta_pp", us, delta_pp))
+    return rows
+
+
+def fig_shard_jax_fidelity() -> List[str]:
+    """Same fidelity question answered by the vectorized engine: partition
+    the trace by key hash, vmap the per-shard lanes, merge hit arrays."""
+    rows = []
+    for spec in common.suite()[:3]:
+        tr = _bench_trace(spec, 150_000)
+        cap = suite_capacity(tr)
+        universe = int(tr.max()) + 1
+        _, base = je.replay_np("clock2q+", tr, cap, universe=universe)
+        for n in SHARD_COUNTS:
+            _, mr = je.sharded_replay_np("clock2q+", tr, cap, n,
+                                         universe=universe)
+            rows.append(common.row(
+                f"fig_shard_jax/{spec.name}/shards{n}/delta_pp", 0.0,
+                100.0 * abs(mr - base)))
+    return rows
+

@@ -436,3 +436,59 @@ def replay_batch(policy: str, states: Dict, traces: jnp.ndarray):
         return jax.lax.scan(step, state, tr)
 
     return jax.vmap(one)(states, traces)
+
+
+# =============================================================================
+# sharded simulation (repro.shardcache's partitioning, vmap-ed)
+# =============================================================================
+
+def sharded_replay(policy: str, trace: np.ndarray, capacity: int,
+                   n_shards: int, universe: int | None = None, **kw):
+    """Simulate the hash-sharded service: partition ``trace`` by the
+    shardcache key hash into ``n_shards`` subtraces, replay them as vmap
+    lanes at ``round(capacity / n_shards)`` each, and merge the per-lane
+    hit arrays back into request order.
+
+    Returns a bool hit array aligned with ``trace``.  Lanes are padded to
+    equal length; the pad accesses run *after* every real access in their
+    lane, so they cannot perturb real hits.
+
+    vmap lanes must share state shapes, so every shard gets the SAME
+    capacity ``round(capacity / n_shards)`` — the total simulated capacity
+    can differ from ``capacity`` by up to ``n_shards // 2`` slots in either
+    direction.  Pass a capacity divisible by ``n_shards`` for an exact
+    equal-total comparison with the unsharded baseline (the benchmarks and
+    parity tests do).
+    """
+    from repro.shardcache.hashing import shard_of_np
+
+    trace = np.asarray(trace)
+    if universe is None:
+        universe = int(trace.max()) + 1
+    cap_shard = int(round(capacity / n_shards))
+    if cap_shard < 2:
+        raise ValueError(f"capacity {capacity} too small for {n_shards} shards")
+    sid = shard_of_np(trace, n_shards)
+    idx = [np.nonzero(sid == s)[0] for s in range(n_shards)]
+    lane_len = max((len(ix) for ix in idx), default=1) or 1
+    lanes = np.zeros((n_shards, lane_len), dtype=np.int32)
+    for s, ix in enumerate(idx):
+        lanes[s, :len(ix)] = trace[ix]
+    states = jax.vmap(
+        lambda _: init_state(policy, cap_shard, int(universe), **kw))(
+        jnp.arange(n_shards))
+    _, hits = replay_batch(policy, states, jnp.asarray(lanes))
+    hits = np.asarray(hits)
+    merged = np.zeros(trace.shape[0], dtype=bool)
+    for s, ix in enumerate(idx):
+        merged[ix] = hits[s, :len(ix)]
+    return merged
+
+
+def sharded_replay_np(policy: str, trace: np.ndarray, capacity: int,
+                      n_shards: int, universe: int | None = None, **kw):
+    """Host-side convenience wrapper: (hit count, miss ratio)."""
+    merged = sharded_replay(policy, trace, capacity, n_shards,
+                            universe=universe, **kw)
+    h = int(merged.sum())
+    return h, 1.0 - h / max(1, merged.shape[0])

@@ -41,6 +41,25 @@ def _next_pow2(n: int) -> int:
     return 1 << max(1, (n - 1).bit_length())
 
 
+def drive_resize(policy, steps_per_call: int = 64) -> bool:
+    """Drive a live resize (``ProdClock2QPlus`` or any policy exposing
+    ``resize_step``/``rehash_pending``/``undrained_count``) until all
+    *migratable* work is done.  Returns True when fully complete, False
+    when only undrainable (pinned/DOING-IO) entries remain — it never
+    spins on those: the unpin/io_done that would release them may be
+    waiting on this very thread."""
+    prev = None
+    while not policy.resize_step(steps_per_call):
+        if policy.rehash_pending():
+            prev = None  # rehashing always progresses: never give up
+            continue
+        left = policy.undrained_count()
+        if left == prev:  # full pass, zero drain progress
+            return False
+        prev = left
+    return True
+
+
 @dataclasses.dataclass
 class AccessResult:
     hit: bool
@@ -117,7 +136,7 @@ class ProdClock2QPlus:
     # -- sizing ---------------------------------------------------------------
     def set_capacity(self, capacity: int) -> None:
         """Set the logical capacity (grow or shrink target). Shrinking may
-        leave entries beyond the boundary; drain with ``shrink_step``."""
+        leave entries beyond the boundary; drain with ``resize_step``."""
         if not (1 <= capacity <= self.max_capacity):
             raise ValueError(f"capacity {capacity} not in [1, {self.max_capacity}]")
         self.capacity = capacity
@@ -131,6 +150,13 @@ class ProdClock2QPlus:
         self.hand %= self.main_cap
         if self.gpos >= self.ghost_cap:
             self.gpos = 0
+        # purge ghost entries stranded beyond a shrunken ring: the cursor
+        # never revisits those slots, so without this they would stay
+        # hash-reachable forever (unbounded-age ghost hits)
+        tail = self.gkey[self.ghost_cap:]
+        if tail.size:
+            for off in np.nonzero(tail != EMPTY)[0].tolist():
+                self._ghost_remove_slot(self.ghost_cap + off)
 
     # -- hashing ---------------------------------------------------------------
     def _h(self, key: int, n_buckets: int) -> int:
@@ -398,6 +424,19 @@ class ProdClock2QPlus:
     def contains(self, key: int) -> bool:
         return self._hash_lookup(key) != EMPTY or self._find_stray(key) != EMPTY
 
+    def slot_of(self, key: int) -> int:
+        """Payload slot of a resident key (no replacement-state update), or
+        EMPTY if absent."""
+        eid = self._hash_lookup(key)
+        if eid == EMPTY:
+            eid = self._find_stray(key)
+        return EMPTY if eid == EMPTY else int(self.block[eid])
+
+    @property
+    def n_slots(self) -> int:
+        """Size of the payload-handle space (preallocated entry count)."""
+        return int(self.key.shape[0])
+
     def __len__(self) -> int:
         return int(np.sum(self.key != EMPTY))
 
@@ -406,10 +445,34 @@ class ProdClock2QPlus:
         return [int(k) for k in self.key[mask]]
 
     # -- live resizing (§4.2) -----------------------------------------------------
+    def rehash_pending(self) -> bool:
+        """True while the incremental hash migration has work left (it can
+        always progress — never blocked by pins/dirty/DOING-IO)."""
+        return self.old_buckets is not None
+
+    def undrained_count(self) -> int:
+        """Resident entries beyond the logical boundaries (only pinned or
+        DOING-IO ones can persist across resize_step calls)."""
+        n = int((self.key[self.small_cap:self.max_small] != EMPTY).sum())
+        n += int((self.key[self.max_small + self.main_cap:] != EMPTY).sum())
+        return n
+
+    def finish_rehash(self, n_entries: int = 256) -> None:
+        """Drive the incremental hash migration (ONLY — never the
+        out-of-bounds drain, whose boundaries may be about to change) to
+        completion.  Unlike the drain, rehashing is pure pointer work and
+        can never be blocked by pinned/dirty/DOING-IO entries, so this
+        always terminates.  Required before a new ``begin_resize`` may
+        retire the old bucket array."""
+        while not self._rehash_step(n_entries):
+            pass
+
     def begin_resize(self, new_capacity: int) -> None:
         """Start a live resize: swap in a right-sized bucket array and let
-        ``resize_step`` migrate entries in the background."""
-        old_caps = (self.small_cap, self.main_cap)
+        ``resize_step`` migrate entries in the background.  If a previous
+        resize's hash migration is still pending it is completed first
+        (two old bucket arrays cannot coexist)."""
+        self.finish_rehash()
         self.set_capacity(new_capacity)
         n_new = _next_pow2(2 * (self.small_cap + self.main_cap))
         if n_new != self.n_buckets:
@@ -418,32 +481,35 @@ class ProdClock2QPlus:
             self.buckets = np.full(n_new, EMPTY, dtype=np.int64)
             self.n_buckets = n_new
             self._rehash_cursor = 0
-        self._shrink_pending = (old_caps[0] > self.small_cap
-                                or old_caps[1] > self.main_cap)
+
+    def _rehash_step(self, n_entries: int) -> bool:
+        """Migrate up to ``n_entries`` from the old hash location; True
+        when the old bucket array is fully retired."""
+        if self.old_buckets is None:
+            return True
+        moved = 0
+        while self._rehash_cursor < self.old_n_buckets and moved < n_entries:
+            b = self._rehash_cursor
+            cur = int(self.old_buckets[b])
+            while cur != EMPTY and moved < n_entries:
+                nxt = int(self.nxt[cur])
+                self.old_buckets[b] = nxt
+                self._hash_insert(cur)
+                cur = nxt
+                moved += 1
+            if cur == EMPTY:
+                self._rehash_cursor += 1
+        if self._rehash_cursor >= self.old_n_buckets:
+            self.old_buckets = None
+            self.old_n_buckets = 0
+            return True
+        return False
 
     def resize_step(self, n_entries: int = 64) -> bool:
         """Background-thread analogue: migrate up to ``n_entries`` from the
         old hash location and drain out-of-bounds slots.  Returns True when
         the resize is complete."""
-        done_hash = True
-        if self.old_buckets is not None:
-            moved = 0
-            while self._rehash_cursor < self.old_n_buckets and moved < n_entries:
-                b = self._rehash_cursor
-                cur = int(self.old_buckets[b])
-                while cur != EMPTY and moved < n_entries:
-                    nxt = int(self.nxt[cur])
-                    self.old_buckets[b] = nxt
-                    self._hash_insert(cur)
-                    cur = nxt
-                    moved += 1
-                if cur == EMPTY:
-                    self._rehash_cursor += 1
-            if self._rehash_cursor >= self.old_n_buckets:
-                self.old_buckets = None
-                self.old_n_buckets = 0
-            else:
-                done_hash = False
+        done_hash = self._rehash_step(n_entries)
         done_drain = self._drain_out_of_bounds(n_entries)
         return done_hash and done_drain
 

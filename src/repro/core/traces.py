@@ -239,3 +239,12 @@ SUITE = [
 
 def footprint(trace: np.ndarray) -> int:
     return int(np.unique(np.asarray(trace)).size)
+
+
+def suite_capacity(trace: np.ndarray, frac: float = 0.05, align: int = 8,
+                   floor: int = 64) -> int:
+    """The benchmark/parity capacity rule: ``frac`` of the trace footprint,
+    floored and aligned (shared by benchmarks/shard.py and the shardcache
+    parity tests so both always compare against the same baseline)."""
+    cap = max(floor, int(frac * footprint(trace)))
+    return cap - cap % align

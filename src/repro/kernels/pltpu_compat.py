@@ -1,0 +1,11 @@
+"""Version-portability shims for the Pallas TPU API.
+
+jax < 0.5 spells the compiler-params dataclass ``TPUCompilerParams``;
+newer releases renamed it ``CompilerParams``.  Kernels import the name
+from here so the next rename lands in one place.
+"""
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams

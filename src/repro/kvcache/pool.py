@@ -22,8 +22,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.prodcache import EMPTY, ProdClock2QPlus
+from repro.core.prodcache import EMPTY, ProdClock2QPlus, drive_resize
 from repro.models.config import ModelConfig
+from repro.shardcache import ShardedClock2QPlus
 
 
 @dataclasses.dataclass
@@ -44,16 +45,32 @@ class BlockPool:
 
     def __init__(self, cfg: ModelConfig, n_hbm_blocks: int, block_size: int,
                  n_host_blocks: int = 0, dtype=jnp.float32, *,
-                 window_frac: float = 0.5, max_hbm_blocks: int = 0):
+                 window_frac: float = 0.5, max_hbm_blocks: int = 0,
+                 n_shards: int = 0, rebalance_headroom: float = 1.0):
         self.cfg = cfg
         self.bs = block_size
         self.n_blocks = n_hbm_blocks
         L, H, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
-        self.kpool = jnp.zeros((L, n_hbm_blocks, block_size, H, hd), dtype)
+        # n_shards > 1 selects the sharded concurrent policy backend
+        # (repro.shardcache); the pool API is identical either way.
+        # rebalance_headroom=1.0 keeps the block arrays at the stated HBM
+        # budget (cross-shard borrowing then needs max_hbm_blocks slack);
+        # >1 preallocates extra blocks per shard for rebalancing.
+        if n_shards > 1:
+            self.policy = ShardedClock2QPlus(
+                n_hbm_blocks, n_shards=n_shards, track_io=True,
+                window_frac=window_frac,
+                max_capacity=max(n_hbm_blocks, max_hbm_blocks),
+                rebalance_headroom=rebalance_headroom)
+        else:
+            self.policy = ProdClock2QPlus(
+                n_hbm_blocks, track_io=True, window_frac=window_frac,
+                max_capacity=max(n_hbm_blocks, max_hbm_blocks))
+        # the block arrays cover the policy's full payload-handle space
+        # (>= n_hbm_blocks when resize headroom / sharding is configured)
+        self.kpool = jnp.zeros((L, self.policy.n_slots, block_size, H, hd),
+                               dtype)
         self.vpool = jnp.zeros_like(self.kpool)
-        self.policy = ProdClock2QPlus(
-            n_hbm_blocks, track_io=True, window_frac=window_frac,
-            max_capacity=max(n_hbm_blocks, max_hbm_blocks))
         self.host: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
         self.n_host_blocks = n_host_blocks or 4 * n_hbm_blocks
         self.stats = PoolStats()
@@ -113,10 +130,9 @@ class BlockPool:
 
     def flush(self, key: int) -> None:
         """Mirror a dirty block to host (background flusher)."""
-        eid = self.policy._hash_lookup(key)
-        if eid == EMPTY:
+        slot = self.policy.slot_of(key)
+        if slot == EMPTY:
             return
-        slot = int(self.policy.block[eid])
         if key not in self.host and len(self.host) < self.n_host_blocks:
             self.host[key] = (np.asarray(self.kpool[:, slot]),
                               np.asarray(self.vpool[:, slot]))
@@ -132,6 +148,10 @@ class BlockPool:
 
     # -- elastic resize (paper §4.2 -> HBM budget changes) -----------------------
     def resize(self, new_n_blocks: int, steps_per_call: int = 64) -> None:
+        """Retarget the HBM budget and drive all *migratable* work to
+        completion.  Blocks pinned or DOING-IO beyond a shrink boundary
+        cannot be drained until released — those are left pending (later
+        ``resize_step``/``resize`` calls finish them) instead of spinning:
+        the unpin/io_done may be waiting on this very thread."""
         self.policy.begin_resize(new_n_blocks)
-        while not self.policy.resize_step(steps_per_call):
-            pass
+        drive_resize(self.policy, steps_per_call)

@@ -1,0 +1,23 @@
+"""Sharded concurrent cache service — the multi-CPU scalability subsystem.
+
+The paper's Clock2Q+ "scales efficiently to multiple CPUs" (§4, §5) by
+keeping the hot path short and lock hold times small.  This package is
+the repo's counterpart: N hash-partitioned ``ProdClock2QPlus`` shards
+behind one facade (``ShardedClock2QPlus``), with
+
+  * ``access_many`` — batched dispatch that groups keys by shard and
+    amortizes per-request overhead (the Multi-step-LRU playbook: trade
+    per-access global ordering for throughput under parallelism),
+  * per-shard locks + a multi-threaded replay harness
+    (``repro.shardcache.replay``) that measures real throughput scaling,
+  * cross-shard capacity rebalancing built on the live-resize protocol
+    (§4.2): hot shards borrow capacity from cold ones without a stop-the-
+    world rebuild,
+  * aggregated stats/flows across shards.
+"""
+
+from repro.shardcache.hashing import shard_of, shard_of_np  # noqa: F401
+from repro.shardcache.sharded import ShardedClock2QPlus  # noqa: F401
+from repro.shardcache.replay import (  # noqa: F401
+    ReplayReport, replay_threaded, scalability_sweep, unsharded_miss_ratio,
+)

@@ -14,6 +14,8 @@ from repro.launch.specs import make_batch
 from repro.models.config import SHAPES, ShapeCell, cell_applicable
 from repro.models.model import build
 
+pytestmark = pytest.mark.slow  # JAX-compile-heavy (see pytest.ini)
+
 CELL = ShapeCell("smoke", 32, 2, "train")
 
 
@@ -26,7 +28,8 @@ def test_smoke_train_step(arch):
     loss, metrics = jax.jit(api.loss)(params, batch)
     assert loss.shape == ()
     assert bool(jnp.isfinite(loss)), arch
-    grads = jax.grad(lambda p: api.loss(p, batch)[0])(params)
+    # jit: eager grad dispatch through the scan-heavy archs costs 15s+
+    grads = jax.jit(jax.grad(lambda p: api.loss(p, batch)[0]))(params)
     gnorm = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
     assert np.isfinite(gnorm) and gnorm > 0, arch
 

@@ -98,6 +98,132 @@ def test_resize_grow_then_shrink_under_load():
     assert len(prod) <= prod.small_cap + prod.main_cap
 
 
+def _fill(prod, keys):
+    for k in keys:
+        if not prod.access(int(k)).hit and prod.track_io:
+            prod.io_done(int(k))  # complete the fill so entries are evictable
+
+
+def test_shrink_with_pinned_dirty_io_beyond_boundary():
+    """Shrink with pinned / DOING-IO entries beyond the new boundary: the
+    drain must report not-done while they are unevictable, leave them
+    resident, then complete once released.  Dirty entries are flushed by
+    the drain itself (§4.2.2) and must NOT block completion."""
+    prod = ProdClock2QPlus(96, max_capacity=96, track_io=True)
+    rng = np.random.default_rng(9)
+    for _ in range(4):           # shuffled revisits promote via ghost hits,
+        _fill(prod, rng.permutation(60))  # filling the Main Clock
+    # mark one resident key per obstacle class, all provably beyond the
+    # post-shrink boundary (capacity 8 -> small_cap 1, main_cap 7)
+    deep_main = [k for k in range(60)
+                 if prod._hash_lookup(k) >= prod.max_small + 7]
+    assert len(deep_main) >= 2
+    pinned, dirty = deep_main[:2]
+    prod.access(pinned, pin=True)
+    prod.io_done(pinned)
+    prod.set_dirty(dirty)
+    while prod.spos == 0:        # park the small cursor past slot 0 so the
+        _fill(prod, [20_000 + prod.spos])  # next miss lands beyond it
+    doing_io = 10_000
+    r = prod.access(doing_io)    # fresh miss -> DOING-IO entry in small
+    assert r.io_pending and prod._hash_lookup(doing_io) >= 1
+    prod.begin_resize(8)
+    for _ in range(200):
+        if prod.resize_step(64):
+            break
+    # pinned + DOING-IO entries may sit beyond the boundary: not done
+    assert not prod.resize_step(64)
+    assert prod.contains(pinned) and prod.contains(doing_io)
+    prod.unpin(pinned)
+    prod.io_done(doing_io)
+    for _ in range(200):
+        if prod.resize_step(64):
+            break
+    assert prod.resize_step(64)
+    assert len(prod) <= prod.small_cap + prod.main_cap
+    # every entry now lives inside the logical boundary
+    for eid in range(prod.small_cap, prod.max_small):
+        assert int(prod.key[eid]) == EMPTY
+    for s in range(prod.main_cap, prod.max_main):
+        assert int(prod.key[prod.max_small + s]) == EMPTY
+
+
+def test_resize_step_to_completion_interleaved_with_accesses():
+    """Drive resize_step fully to completion while accesses interleave:
+    lookups must stay exact (no false miss for a resident key) and the
+    final state must be fully migrated (no stray hash entries left)."""
+    prod = ProdClock2QPlus(20, max_capacity=120)
+    rng = np.random.default_rng(11)
+    _fill(prod, rng.integers(0, 300, 800))
+    for new_cap in (110, 14):
+        prod.begin_resize(new_cap)
+        done = False
+        for k in rng.integers(0, 300, 600):
+            resident = prod.contains(int(k))
+            assert prod.access(int(k)).hit == resident
+            done = prod.resize_step(2)
+        while not done:
+            done = prod.resize_step(16)
+        # fully migrated: old bucket array retired, lookups need no strays
+        assert prod.old_buckets is None
+        for k in range(300):
+            if prod.contains(k):
+                assert prod._hash_lookup(k) != EMPTY
+    assert len(prod) <= prod.small_cap + prod.main_cap
+
+
+def test_shrink_then_regrow_before_any_step_keeps_residents():
+    """Retargeting a pending shrink back up (the shardcache rebalancing
+    pattern) must not drain entries at the abandoned smaller capacity:
+    only the hash migration may be forced before the new targets apply."""
+    prod = ProdClock2QPlus(100, max_capacity=100)
+    rng = np.random.default_rng(13)
+    _fill(prod, rng.integers(0, 90, 2000))
+    resident_before = len(prod)
+    assert resident_before > 50
+    prod.begin_resize(10)    # bucket array swaps; no resize_step yet
+    prod.begin_resize(100)   # immediately retarget back up
+    assert len(prod) == resident_before  # nobody was evicted
+    while not prod.resize_step(256):
+        pass
+    assert len(prod) == resident_before
+    for k in range(90):
+        if prod.contains(k):
+            assert prod.access(k).hit
+
+
+def test_ghost_cursor_after_ghost_cap_shrink():
+    """Shrinking moves ghost_cap below the current cursor: the cursor must
+    wrap back into range and subsequent pushes stay within the new ring."""
+    prod = ProdClock2QPlus(80, max_capacity=80)
+    # burn through enough one-shot keys to fill the ghost ring and move gpos
+    _fill(prod, range(1000, 1000 + 200))
+    assert prod.gpos < prod.ghost_cap
+    old_gpos = prod.gpos
+    prod.begin_resize(10)   # ghost_cap shrinks below the old cursor
+    assert prod.ghost_cap < 40
+    assert prod.gpos < prod.ghost_cap  # cursor re-anchored, never OOB
+    # entries stranded beyond the new ring are purged eagerly — the
+    # cursor never revisits those slots, so they would otherwise stay
+    # hash-reachable forever (unbounded-age ghost hits)
+    assert (prod.gkey[prod.ghost_cap:] == EMPTY).all()
+    while not prod.resize_step(64):
+        pass
+    # pushes after the shrink cycle strictly within the new ring
+    seen_slots = set()
+    for k in range(5000, 5000 + 3 * prod.ghost_cap):
+        prod.access(k)
+        assert prod.gpos < prod.ghost_cap
+        seen_slots.add(prod.gpos)
+    assert seen_slots <= set(range(prod.ghost_cap))
+    # ghost hits on the shrunken ring still promote to main
+    flows0 = prod.flows["ghost_to_main"]
+    recent = [int(k) for k in prod.gkey[:prod.ghost_cap] if int(k) != EMPTY]
+    assert recent, "shrunken ghost ring should hold recent demotions"
+    prod.access(recent[-1])
+    assert prod.flows["ghost_to_main"] == flows0 + 1
+
+
 def test_fig6_race_stray_migration():
     """The paper's lookup/insert race (Fig. 6) maps to the resize
     protocol's stray handling: a key hashed in the OLD bucket array is

@@ -1,7 +1,10 @@
 """Property-based tests (hypothesis) for the cache substrate's invariants."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis", reason="optional dev dependency")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import make_policy, policy_names
 from repro.core.prodcache import ProdClock2QPlus

@@ -10,6 +10,8 @@ from repro.configs import get_config, reduced
 from repro.models.model import build
 from repro.serving.engine import Request, ServingEngine
 
+pytestmark = pytest.mark.slow  # JAX-compile-heavy (see pytest.ini)
+
 
 @pytest.fixture(scope="module")
 def small_model():

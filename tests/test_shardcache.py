@@ -1,0 +1,388 @@
+"""Sharded concurrent cache service tests: partition fidelity vs the
+unsharded cache (acceptance: within 2pp on SUITE traces), batched access
+semantics, thread safety, cross-shard rebalancing on the live-resize
+protocol, aggregated stats, the JAX sharded-simulation mode, and the
+BlockPool sharded backend."""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import jax_engine as je, traces
+from repro.core.prodcache import EMPTY, ProdClock2QPlus
+from repro.shardcache import (
+    ShardedClock2QPlus, replay_threaded, scalability_sweep, shard_of,
+    shard_of_np, unsharded_miss_ratio,
+)
+from repro.shardcache.sharded import apportion
+
+PARITY_SPECS = traces.SUITE[:3]  # >= 3 SUITE traces (acceptance criterion)
+
+
+def _meta_prefix(spec, n=120_000):
+    return traces.derive_metadata(spec.data())[:n]
+
+
+_cap_for = traces.suite_capacity  # shared with benchmarks/shard.py
+
+
+# -- partitioning ---------------------------------------------------------------
+
+def test_shard_hash_consistent_and_balanced():
+    keys = np.arange(100_000, dtype=np.int64)
+    sids = shard_of_np(keys, 8)
+    assert sids.min() >= 0 and sids.max() < 8
+    # scalar and vectorized hashes agree
+    for k in (0, 1, 17, 999_999, 2**40 + 3):
+        assert shard_of(k, 8) == shard_of_np(np.asarray([k]), 8)[0]
+    # roughly balanced: no shard holds more than 2x its fair share
+    counts = np.bincount(sids, minlength=8)
+    assert counts.max() < 2 * len(keys) / 8
+
+
+@pytest.mark.parametrize("spec", PARITY_SPECS, ids=lambda s: s.name)
+@pytest.mark.parametrize("n_shards", [4, 8])
+def test_sharded_miss_ratio_parity_with_unsharded(spec, n_shards):
+    """Acceptance: sharding at equal total capacity moves the miss ratio
+    by < 2 percentage points on SUITE traces."""
+    tr = _meta_prefix(spec)
+    cap = _cap_for(tr)
+    base = unsharded_miss_ratio(tr, cap)
+    sh = ShardedClock2QPlus(cap, n_shards=n_shards)
+    hits = sh.access_many(tr)
+    mr = 1.0 - hits.mean()
+    assert abs(mr - base) < 0.02, (spec.name, n_shards, mr, base)
+
+
+def test_sharded_jax_engine_parity():
+    """The vmap sharded simulation tracks the unsharded lane within 2pp."""
+    tr = traces.zipf_trace(40_000, 4096, alpha=1.1, seed=3)
+    _, base = je.replay_np("clock2q+", tr, 256, universe=4096)
+    for n in (4, 8):
+        _, mr = je.sharded_replay_np("clock2q+", tr, 256, n, universe=4096)
+        assert abs(mr - base) < 0.02, (n, mr, base)
+
+
+def test_sharded_jax_hits_align_with_request_order():
+    """Merged hit array: a key's first access is always a miss, and a
+    repeat access with no intervening evictions (tiny working set) hits."""
+    tr = np.asarray([5, 9, 5, 9, 5, 9, 100, 5, 100], dtype=np.int64)
+    hits = je.sharded_replay("clock2q+", tr, 64, 4, universe=128)
+    assert not hits[0] and not hits[1] and not hits[6]  # cold misses
+    assert hits[2:6].all() and hits[7] and hits[8]
+
+
+# -- access semantics ------------------------------------------------------------
+
+def test_access_many_matches_per_shard_sequential_replay():
+    """Batched dispatch preserves per-shard order: each shard sees exactly
+    the subsequence of keys that hash to it, in input order."""
+    rng = np.random.default_rng(7)
+    keys = rng.integers(0, 500, 20_000).astype(np.int64)
+    n = 4
+    sh = ShardedClock2QPlus(64, n_shards=n)
+    got = sh.access_many(keys)
+    sids = shard_of_np(keys, n)
+    want = np.zeros(len(keys), dtype=bool)
+    for s in range(n):
+        idx = np.nonzero(sids == s)[0]
+        ref = ProdClock2QPlus(sh.shards[s].capacity,
+                              max_capacity=sh.shard_max)
+        for i in idx.tolist():
+            want[i] = ref.access(int(keys[i])).hit
+    assert (got == want).all()
+
+
+def test_access_globalizes_block_handles():
+    sh = ShardedClock2QPlus(64, n_shards=4, track_io=True)
+    seen = {}
+    rng = np.random.default_rng(1)
+    for k in rng.integers(0, 300, 5000):
+        r = sh.access(int(k))
+        assert 0 <= r.block < sh.n_slots
+        sid = sh.shard_of(int(k))
+        assert r.block // sh.stride == sid  # handle encodes the shard
+        if r.evicted_block != EMPTY:
+            assert r.evicted_block // sh.stride == sid
+        seen[int(k)] = r.block
+        sh.io_done(int(k))
+    # resident keys report the same slot via slot_of
+    for k, blk in seen.items():
+        if sh.contains(k):
+            assert sh.slot_of(k) == blk
+
+
+def test_aggregated_stats_and_flows():
+    sh = ShardedClock2QPlus(64, n_shards=4)
+    rng = np.random.default_rng(2)
+    keys = rng.integers(0, 400, 10_000)
+    hits = sh.access_many(keys)
+    assert sh.hits + sh.misses == len(keys)
+    assert sh.hits == int(hits.sum())
+    assert sum(sh.flows.values()) == sum(
+        sum(s.flows.values()) for s in sh.shards)
+    assert len(sh) == sum(len(s) for s in sh.shards) <= 64
+    per = sh.shard_stats()
+    assert sum(p["hits"] for p in per) == sh.hits
+
+
+def test_dirty_pin_io_route_to_owning_shard():
+    sh = ShardedClock2QPlus(32, n_shards=4, track_io=True)
+    sh.access(42, dirty=True, pin=True)
+    assert 42 in sh
+    assert 42 in sh.dirty_keys()
+    owner = sh.shards[sh.shard_of(42)]
+    assert owner.dirty_keys() == [42]
+    sh.io_done(42)
+    sh.clean(42)
+    assert sh.dirty_keys() == []
+    sh.unpin(42)
+    sh.set_dirty(42)
+    assert 42 in sh.dirty_keys()
+
+
+def test_access_many_completes_io_on_track_io_cache():
+    """Batched replay on a track_io cache must not leave its own misses
+    wedged DOING-IO (they would be unevictable forever)."""
+    sh = ShardedClock2QPlus(32, n_shards=4, track_io=True)
+    rng = np.random.default_rng(4)
+    # churn far past capacity: hangs at the first all-DOING-IO shard if
+    # the batch path leaks fill obligations
+    hits = sh.access_many(rng.integers(0, 500, 20_000))
+    assert sh.hits + sh.misses == 20_000
+    for s in sh.shards:
+        assert not s.io[s.key != EMPTY].any()
+    # an access()-admitted in-flight entry is NOT completed by a batch
+    r = sh.access(123456)
+    assert r.io_pending
+    sh.access_many(np.asarray([123456], dtype=np.int64))
+    owner = sh.shards[sh.shard_of(123456)]
+    assert bool(owner.io[owner._hash_lookup(123456)])
+
+
+# -- threading -------------------------------------------------------------------
+
+def test_threaded_replay_conserves_requests_and_fidelity():
+    tr = _meta_prefix(PARITY_SPECS[0], 40_000)
+    cap = _cap_for(tr)
+    serial = replay_threaded(ShardedClock2QPlus(cap, n_shards=8), tr, 1)
+    for t in (2, 4):
+        cache = ShardedClock2QPlus(cap, n_shards=8)
+        rep = replay_threaded(cache, tr, t)
+        assert rep.n_requests == len(tr)
+        assert rep.hits == cache.hits  # worker counts match cache stats
+        assert abs(rep.miss_ratio - serial.miss_ratio) < 0.05
+    reports = scalability_sweep(tr[:10_000], cap, n_shards=8, threads=(1, 2))
+    assert [r.n_threads for r in reports] == [1, 2]
+    assert all(r.throughput > 0 for r in reports)
+
+
+def test_concurrent_access_no_corruption():
+    """Hammer one cache from 4 threads; shard invariants must hold: every
+    request is counted, and each shard's payload handles stay unique."""
+    sh = ShardedClock2QPlus(48, n_shards=4)
+    rng = np.random.default_rng(3)
+    chunks = [rng.integers(0, 600, 8_000).astype(np.int64) for _ in range(4)]
+
+    def worker(c):
+        sh.access_many(c, dirty=False)
+
+    threads = [threading.Thread(target=worker, args=(c,)) for c in chunks]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert sh.hits + sh.misses == sum(len(c) for c in chunks)
+    for s in sh.shards:
+        live = s.block[s.key != EMPTY].tolist()
+        assert len(set(live)) == len(live)
+        assert set(s.free_blocks).isdisjoint(live)
+
+
+# -- rebalancing -----------------------------------------------------------------
+
+def test_apportion_sums_and_bounds():
+    assert sum(apportion([1, 1, 1, 1], 64, 2, 100)) == 64
+    caps = apportion([100, 1, 1, 1], 40, 2, 16)
+    assert sum(caps) == 40 and caps[0] == 16 and all(c >= 2 for c in caps)
+    with pytest.raises(ValueError):
+        apportion([1, 1], 100, 2, 10)
+
+
+def test_rebalance_moves_capacity_to_hot_shard():
+    n = 4
+    sh = ShardedClock2QPlus(64, n_shards=n)
+    hot_sid = 2
+    hot = [k for k in range(20_000) if shard_of(k, n) == hot_sid][:800]
+    for k in hot:
+        sh.access(k)  # heavy miss traffic on one shard
+    caps = sh.rebalance()
+    assert sum(caps) == 64
+    assert caps[hot_sid] == max(caps) > 64 // n
+    assert sh.shard_capacities == caps
+    # service stays correct through the migration
+    for k in hot[:100]:
+        r = sh.access(k)
+        assert 0 <= r.block < sh.n_slots
+        assert sh.contains(k)
+
+
+def test_rebalance_incremental_steps_interleaved_with_traffic():
+    sh = ShardedClock2QPlus(64, n_shards=4)
+    rng = np.random.default_rng(5)
+    for k in rng.integers(0, 1000, 4000):
+        sh.access(int(k))
+    sh.rebalance(complete=False)
+    done = False
+    for k in rng.integers(0, 1000, 3000):
+        resident_before = sh.contains(int(k))
+        r = sh.access(int(k))
+        assert r.hit == resident_before  # lookups stay exact mid-migration
+        done = sh.rebalance_step(4)
+    while not done:
+        done = sh.rebalance_step(256)
+    for s in sh.shards:
+        assert len(s) <= s.small_cap + s.main_cap
+
+
+def test_repeated_rebalance_without_completion_is_safe():
+    """Retargeting a shard mid-migration must not lose resident entries."""
+    sh = ShardedClock2QPlus(64, n_shards=4, rebalance_headroom=3.0)
+    rng = np.random.default_rng(6)
+    keys = rng.integers(0, 300, 2000)
+    for k in keys:
+        sh.access(int(k))
+    for caps in ([10, 10, 34, 10], [28, 12, 12, 12], [16, 16, 16, 16]):
+        sh.set_shard_capacities(caps, complete=False)
+        resident = [int(k) for k in set(keys.tolist()) if sh.contains(int(k))]
+        for k in resident:
+            assert sh.access(k).hit  # lookups stay correct mid-migration
+    while not sh.rebalance_step(256):
+        pass
+    assert sh.shard_capacities == [16, 16, 16, 16]
+
+
+def test_retarget_with_pinned_entry_does_not_deadlock():
+    """A pinned entry can block a shrink's out-of-bounds drain forever;
+    retargeting that shard again must NOT spin-wait on the drain (which
+    would deadlock unpin() on the shard lock) — only the hash migration
+    is completed, the drain carries over to the new targets."""
+    sh = ShardedClock2QPlus(64, n_shards=4, rebalance_headroom=3.0)
+    hot_sid = 1
+    keys = [k for k in range(20_000) if shard_of(k, 4) == hot_sid][:200]
+    for k in keys:
+        sh.access(k)
+    # pin the small-FIFO occupant of slot 1: beyond the boundary once the
+    # shrink to capacity 4 drops small_cap from 2 to 1
+    shard = sh.shards[hot_sid]
+    pinned = next(k for k in keys if shard._hash_lookup(k) == 1)
+    sh.access(pinned, pin=True)
+    # complete=True must RETURN with the pinned entry undrainable (the
+    # unpin may be waiting on this very thread), leaving the shard pending
+    sh.set_shard_capacities([44, 4, 8, 8], complete=True)    # deep shrink
+    assert not sh.rebalance_step(512)  # pinned entry keeps the drain open
+    # retarget the still-draining shard: must return, not hang
+    sh.set_shard_capacities([16, 16, 16, 16], complete=False)
+    assert sh.contains(pinned)
+    sh.unpin(pinned)
+    while not sh.rebalance_step(256):
+        pass
+    for s in sh.shards:
+        assert len(s) <= s.small_cap + s.main_cap
+
+
+def test_complete_retarget_finishes_rehash_with_tiny_steps():
+    """Reviewer repro: a grow-heavy retarget with tiny steps has zero
+    drain work from the start, which must NOT trip the no-progress break
+    while hash migration (never blockable) is still pending."""
+    sh = ShardedClock2QPlus(64, n_shards=4, rebalance_headroom=3.0)
+    rng = np.random.default_rng(8)
+    for k in rng.integers(0, 6000, 6000):
+        sh.access(int(k))
+    sh.set_shard_capacities([40, 8, 8, 8], steps_per_call=2, complete=True)
+    assert sh.rebalance_step(1)  # nothing pending
+    assert all(s.old_buckets is None for s in sh.shards)
+    assert sh.shard_capacities == [40, 8, 8, 8]
+
+
+def test_concurrent_rebalance_conserves_total_capacity():
+    """Interleaved retargeting from two threads must never leave shard
+    targets overcommitting the stated total budget."""
+    sh = ShardedClock2QPlus(64, n_shards=4, rebalance_headroom=3.0)
+    rng = np.random.default_rng(9)
+    for k in rng.integers(0, 3000, 4000):
+        sh.access(int(k))
+    caps_sets = ([30, 12, 12, 10], [10, 12, 12, 30])
+
+    def retarget(caps):
+        for _ in range(20):
+            sh.set_shard_capacities(caps, complete=True)
+
+    threads = [threading.Thread(target=retarget, args=(c,))
+               for c in caps_sets]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert sum(sh.shard_capacities) == 64
+    assert sh.shard_capacities in [list(c) for c in caps_sets]
+
+
+def test_total_resize_preserves_shard_proportions():
+    sh = ShardedClock2QPlus(64, n_shards=4)
+    sh.set_shard_capacities([32, 16, 8, 8])
+    sh.begin_resize(32)
+    while not sh.resize_step(256):
+        pass
+    assert sum(sh.shard_capacities) == 32
+    caps = sh.shard_capacities
+    assert caps[0] == max(caps)  # proportions survive the total resize
+
+
+# -- BlockPool integration -------------------------------------------------------
+
+def test_blockpool_sharded_backend():
+    from repro.configs import get_config, reduced
+    from repro.kvcache.pool import BlockPool
+    cfg = reduced(get_config("granite-3-8b"))
+    pool = BlockPool(cfg, 32, 8, n_shards=4)
+    assert pool.kpool.shape[1] == pool.policy.n_slots
+    rng = np.random.default_rng(0)
+    for k in rng.integers(0, 120, 3000):
+        slot, needs_fill = pool.lookup(int(k), pin=False)
+        assert 0 <= slot < pool.policy.n_slots
+        if needs_fill:
+            pool.policy.io_done(int(k))
+            pool.policy.set_dirty(int(k))
+        pool.run_flusher()
+    assert pool.stats.hits > 0 and pool.stats.swap_out > 0
+    pool.resize(24)
+    assert sum(pool.policy.shard_capacities) == 24
+
+
+def test_blockpool_resize_returns_with_pinned_blocks():
+    """pool.resize during a shrink must return (not spin) while pinned /
+    in-flight blocks sit beyond the boundary — the unpin/io_done that
+    would release them may be waiting on this very thread."""
+    from repro.configs import get_config, reduced
+    from repro.kvcache.pool import BlockPool
+    cfg = reduced(get_config("granite-3-8b"))
+    for n_shards in (0, 4):  # both policy backends
+        pool = BlockPool(cfg, 32, 8, n_shards=n_shards)
+        rng = np.random.default_rng(1)
+        pinned = []
+        for k in rng.integers(0, 80, 400):
+            k = int(k)
+            pin = len(pinned) < 6 and k not in pinned
+            slot, fill = pool.lookup(k, pin=pin)
+            if fill:
+                pool.policy.io_done(k)
+            if pin:
+                pinned.append(k)
+        pool.resize(8)   # deep shrink with 6 pinned blocks: must return
+        for k in pinned:
+            pool.unpin(k)
+            assert pool.policy.contains(k)  # pinned survived the shrink
+        pool.resize(8)   # drains the rest now that pins are gone
+        assert pool.policy.undrained_count() == 0

@@ -15,6 +15,8 @@ from repro.serving.engine import Request, ServingEngine
 from repro.training import optim, step as step_lib
 from repro.checkpoint.ckpt import CheckpointManager
 
+pytestmark = pytest.mark.slow  # JAX-compile-heavy (see pytest.ini)
+
 
 def test_clock2qplus_beats_s3fifo_on_metadata_traces():
     """Paper §5.3 headline (directional): on derived metadata traces at

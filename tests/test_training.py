@@ -16,6 +16,8 @@ from repro.models.config import ShapeCell
 from repro.models.model import build
 from repro.training import optim, step as step_lib
 
+pytestmark = pytest.mark.slow  # JAX-compile-heavy (see pytest.ini)
+
 
 @pytest.fixture(scope="module")
 def tiny():

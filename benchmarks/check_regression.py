@@ -1,0 +1,143 @@
+"""Benchmark-regression gate for CI.
+
+Compares a benchmark CSV (``benchmarks.run`` output) against the
+committed ``benchmarks/baseline.json`` under that file's explicit
+tolerance rules, writes a ``BENCH_ci.json`` verdict report, and exits
+non-zero on any regression.
+
+    # gate (what the bench-regression CI job runs)
+    REPRO_BENCH_CI=1 python -m benchmarks.run --only fig7,fig13,perf_cpu
+    python -m benchmarks.check_regression --out BENCH_ci.json
+
+    # refresh the baseline after an intentional change (same bench run,
+    # then rewrite baseline rows, keeping the tolerance rules)
+    python -m benchmarks.check_regression --update
+
+Tolerance rules (first matching ``prefix`` wins):
+  * ``ignore``       — row must exist, values not gated (timing rows)
+  * ``derived_abs``  — |derived - baseline| <= tol (miss ratios &c.)
+  * ``us_factor``    — us_per_call <= max(us_floor, baseline * factor)
+                       (wall-clock: generous, CI machines vary)
+Rows missing from the run fail; rows new in the run are reported but
+never fail (commit them to the baseline when intentional).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+DEFAULT_CSV = REPO / "experiments" / "bench_results.csv"
+DEFAULT_BASELINE = REPO / "benchmarks" / "baseline.json"
+
+
+def parse_csv(path: Path) -> dict:
+    rows = {}
+    lines = path.read_text().strip().splitlines()
+    for line in lines[1:]:  # skip header
+        parts = line.split(",", 2)
+        if len(parts) != 3:
+            continue  # continuation line of a multi-line ERROR message
+        name, us, derived = parts
+        try:
+            us = float(us)
+        except ValueError:
+            continue  # not a data row
+        try:
+            derived = float(derived)
+        except ValueError:
+            pass  # error strings stay strings (and fail value gates)
+        rows[name] = {"us": us, "derived": derived}
+    return rows
+
+
+def rule_for(name: str, tolerances: list) -> dict:
+    for rule in tolerances:
+        if name.startswith(rule["prefix"]):
+            return rule
+    return {"prefix": "", "ignore": True}
+
+
+def check_row(name: str, base: dict, run: dict, rule: dict) -> list:
+    """Failure strings for one row (empty = pass)."""
+    if rule.get("ignore"):
+        return []
+    fails = []
+    if "derived_abs" in rule:
+        b, r = base["derived"], run["derived"]
+        if isinstance(b, float) and isinstance(r, float):
+            if abs(r - b) > rule["derived_abs"]:
+                fails.append(
+                    f"{name}: derived {r:.6f} vs baseline {b:.6f} "
+                    f"(tol {rule['derived_abs']})")
+        elif b != r:
+            fails.append(f"{name}: derived {r!r} vs baseline {b!r}")
+    if "us_factor" in rule:
+        cap = max(rule.get("us_floor", 0.0), base["us"] * rule["us_factor"])
+        if run["us"] > cap:
+            fails.append(
+                f"{name}: us_per_call {run['us']:.3f} > {cap:.3f} "
+                f"(baseline {base['us']:.3f} x {rule['us_factor']})")
+    return fails
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--csv", type=Path, default=DEFAULT_CSV)
+    ap.add_argument("--baseline", type=Path, default=DEFAULT_BASELINE)
+    ap.add_argument("--out", type=Path, default=None,
+                    help="write a BENCH_ci.json verdict report here")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline's rows from --csv "
+                         "(tolerance rules are kept)")
+    args = ap.parse_args()
+
+    baseline = json.loads(args.baseline.read_text())
+    rows = parse_csv(args.csv)
+
+    if args.update:
+        keep = [n for n in rows if not n.endswith("/ERROR")]
+        baseline["rows"] = {n: rows[n] for n in sorted(keep)}
+        args.baseline.write_text(json.dumps(baseline, indent=1) + "\n")
+        print(f"baseline updated: {len(keep)} rows -> {args.baseline}")
+        return 0
+
+    failures, checked, verdicts = [], 0, {}
+    for name, base in baseline["rows"].items():
+        rule = rule_for(name, baseline["tolerances"])
+        if name not in rows:
+            failures.append(f"{name}: missing from benchmark run")
+            verdicts[name] = "missing"
+            continue
+        fails = check_row(name, base, rows[name], rule)
+        checked += 1
+        verdicts[name] = "fail" if fails else (
+            "ignored" if rule.get("ignore") else "pass")
+        failures.extend(fails)
+    new_rows = sorted(set(rows) - set(baseline["rows"]))
+
+    report = {
+        "pass": not failures,
+        "checked": checked,
+        "baseline_rows": len(baseline["rows"]),
+        "failures": failures,
+        "new_rows": new_rows,
+        "verdicts": verdicts,
+    }
+    if args.out:
+        args.out.write_text(json.dumps(report, indent=1) + "\n")
+    for f in failures:
+        print(f"REGRESSION {f}", file=sys.stderr)
+    if new_rows:
+        print(f"note: {len(new_rows)} rows not in baseline "
+              f"(e.g. {new_rows[:3]})")
+    print(f"bench-regression: {checked}/{len(baseline['rows'])} rows "
+          f"checked, {len(failures)} failure(s)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -17,6 +17,11 @@ import numpy as np
 from repro.core import stats, traces
 
 FULL = os.environ.get("REPRO_BENCH_FULL", "0") == "1"
+# REPRO_BENCH_CI=1: the deterministic reduced tier the bench-regression CI
+# job runs (fewer traces, truncated streams).  baseline.json is generated
+# under this flag, so comparisons are apples-to-apples.
+CI = os.environ.get("REPRO_BENCH_CI", "0") == "1" and not FULL
+CI_TRACE_LIMIT = 150_000
 
 # paper cache sizes (fractions of trace footprint)
 SIZE_FRACS = (0.005, 0.01, 0.05, 0.1)
@@ -25,13 +30,16 @@ _TRACE_CACHE: Dict[Tuple, np.ndarray] = {}
 
 
 def suite():
-    return traces.SUITE if FULL else traces.SUITE[:4]
+    if FULL:
+        return traces.SUITE
+    return traces.SUITE[:2] if CI else traces.SUITE[:4]
 
 
 def data_trace(spec) -> np.ndarray:
     key = ("data", spec.name)
     if key not in _TRACE_CACHE:
-        _TRACE_CACHE[key] = spec.data()
+        tr = spec.data()
+        _TRACE_CACHE[key] = tr[:CI_TRACE_LIMIT] if CI else tr
     return _TRACE_CACHE[key]
 
 

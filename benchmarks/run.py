@@ -14,7 +14,7 @@ import sys
 import time
 from pathlib import Path
 
-from benchmarks import paper_figs, perf, shard
+from benchmarks import paper_figs, perf, shard, tuning
 
 BENCHES = [
     ("fig7", paper_figs.fig7_fidelity),
@@ -27,7 +27,10 @@ BENCHES = [
     ("fig14", paper_figs.fig14_nonblock),
     ("fig_shard", shard.fig_shard_fidelity),
     ("fig_shard_jax", shard.fig_shard_jax_fidelity),
+    ("fig_sampled_mrc", tuning.fig_sampled_mrc),
+    ("fig_tuner", tuning.fig_tuner_converge),
     ("perf_cpu", perf.perf_cpu_overhead),
+    ("perf_sweep_grid", tuning.perf_sweep_grid),
     ("perf_shard_scalability", shard.perf_shard_scalability),
     ("perf_engine", perf.perf_jax_engine),
     ("perf_serving", perf.perf_serving),

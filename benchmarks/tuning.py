@@ -1,0 +1,108 @@
+"""Tuning-subsystem benchmarks: batched-sweep throughput vs the serial
+replay path it replaced, and OnlineTuner convergence on SUITE traces."""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import traces
+from repro.core.prodcache import ProdClock2QPlus
+from repro.tuning import OnlineTuner, sweep_grid
+from repro.tuning import profiler
+from repro.tuning.sweep import make_grid, serial_sweep_hits, sweep_hits
+
+GRID_WINDOW_FRACS = (0.1, 0.3, 0.5, 1.0)
+
+
+def _grid_trace() -> np.ndarray:
+    tr = common.meta_trace(traces.SUITE[0])
+    return tr if common.FULL else tr[:60_000]
+
+
+def perf_sweep_grid() -> List[str]:
+    """The tentpole measurement: a full >=8x4 MRC grid (capacities x
+    correlation windows) in ONE jitted call vs one replay per config."""
+    rows = []
+    tr = _grid_trace()
+    fp = traces.footprint(tr)
+    caps = [max(8, int(fp * f))
+            for f in (0.005, 0.01, 0.02, 0.05, 0.1, 0.2, 0.35, 0.5)]
+    grid = make_grid(caps, GRID_WINDOW_FRACS)
+    t0 = time.perf_counter()
+    hb = sweep_hits(tr, grid)
+    t_b = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    sweep_hits(tr, grid)           # jit-cached: the tuner's steady state
+    t_warm = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    hs = serial_sweep_hits(tr, grid)
+    t_s = time.perf_counter() - t0
+    n = len(tr) * len(grid)
+    rows.append(common.row("perf/sweep_grid/batched", 1e6 * t_b / n,
+                           len(grid)))
+    rows.append(common.row("perf/sweep_grid/batched_warm", 1e6 * t_warm / n,
+                           len(grid)))
+    rows.append(common.row("perf/sweep_grid/serial", 1e6 * t_s / n,
+                           len(grid)))
+    rows.append(common.row("perf/sweep_grid/speedup", 0.0, t_s / max(t_b, 1e-9)))
+    rows.append(common.row("perf/sweep_grid/speedup_warm", 0.0,
+                           t_s / max(t_warm, 1e-9)))
+    rows.append(common.row("perf/sweep_grid/max_abs_hit_diff", 0.0,
+                           int(np.abs(hb - hs).max())))
+    return rows
+
+
+def fig_sampled_mrc() -> List[str]:
+    """Profiler fidelity: sampled-MRC estimation error vs the exact MRC
+    (max abs error over the capacity curve, per trace)."""
+    rows = []
+    for spec in common.suite()[:3]:
+        tr = common.meta_trace(spec)
+        if not common.FULL:
+            tr = tr[:120_000]
+        fp = traces.footprint(tr)
+        caps = [max(8, int(fp * f)) for f in (0.01, 0.02, 0.05, 0.1)]
+        grid = make_grid(caps)
+        exact = sweep_grid(tr, grid)
+        t0 = time.perf_counter()
+        est = profiler.estimate_sweep(tr, grid, rate_shift=5)
+        us = 1e6 * (time.perf_counter() - t0) / len(tr)
+        err = float(np.nanmax(np.abs(est - exact)))
+        rows.append(common.row(
+            f"fig_sampled_mrc/{spec.name}/max_abs_err", us, err))
+    return rows
+
+
+def fig_tuner_converge() -> List[str]:
+    """OnlineTuner convergence: start a live cache at a deliberately bad
+    correlation window, replay a SUITE trace through it with the tuner
+    observing, then score the tuner's final configuration on the full
+    trace vs the best offline fig13-style sweep value (gap in pp)."""
+    rows = []
+    wfs = (0.1, 0.3, 0.5, 1.0)
+    for spec in common.suite()[:3]:
+        tr = common.meta_trace(spec)
+        if not common.FULL:
+            tr = tr[:120_000]
+        cap = traces.suite_capacity(tr)
+        offline = sweep_grid(tr, make_grid([cap], wfs))
+        best = float(offline.min())
+        cache = ProdClock2QPlus(cap, window_frac=8.0)  # deliberately bad
+        tuner = OnlineTuner(cache, window_fracs=wfs, retune_every=30_000,
+                            rate_shift=5, min_gain=0.001)
+        t0 = time.perf_counter()
+        for k in tr:
+            cache.access(int(k))
+            tuner.observe(int(k))
+        us = 1e6 * (time.perf_counter() - t0) / len(tr)
+        final_wf = cache.tuning["window_frac"]
+        final = float(sweep_grid(tr, make_grid([cap], [final_wf]))[0])
+        rows.append(common.row(
+            f"fig_tuner/{spec.name}/gap_pp", us, 100.0 * (final - best)))
+        rows.append(common.row(
+            f"fig_tuner/{spec.name}/final_window", 0.0, final_wf))
+    return rows

@@ -35,6 +35,20 @@ def _seg(capacity: int, frac: float) -> int:
     return max(1, int(round(capacity * frac)))
 
 
+def c2qp_sizes(capacity: int, small_frac: float = 0.1,
+               ghost_frac: float = 0.5,
+               window_frac: float = 0.5) -> Tuple[int, int, int, int]:
+    """(small, main, ghost, window) segment sizes for one configuration —
+    the single source of the sizing formulas, shared by ``c2qp_init`` and
+    the batched grid engine (repro.tuning.sweep), whose exact-parity
+    guarantee depends on both deriving identical sizes."""
+    S = min(capacity, _seg(capacity, small_frac))
+    M = max(1, capacity - S)
+    G = _seg(capacity, ghost_frac)
+    W = int(round(window_frac * S))
+    return S, M, G, W
+
+
 # =============================================================================
 # Clock2Q+ family (covers clock2q via sizing, s3fifo-1bit via window=0 with
 # a clock main; the faithful s3fifo uses the FIFO-reinsert main below)
@@ -44,10 +58,7 @@ def c2qp_init(capacity: int, universe: int, *, small_frac: float = 0.1,
               ghost_frac: float = 0.5, window_frac: float = 0.5,
               skip_limit: int = 0) -> Dict[str, jnp.ndarray]:
     """skip_limit=0 means unlimited (paper default)."""
-    S = min(capacity, _seg(capacity, small_frac))
-    M = max(1, capacity - S)
-    G = _seg(capacity, ghost_frac)
-    W = int(round(window_frac * S))
+    S, M, G, W = c2qp_sizes(capacity, small_frac, ghost_frac, window_frac)
     return dict(
         skey=jnp.full((S,), EMPTY), sref=jnp.zeros((S,), jnp.bool_),
         sseq=jnp.zeros((S,), jnp.int32), spos=jnp.int32(0),

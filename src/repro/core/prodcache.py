@@ -76,7 +76,9 @@ class ProdClock2QPlus:
     def __init__(self, capacity: int, *, small_frac: float = 0.1,
                  ghost_frac: float = 0.5, window_frac: float = 0.5,
                  skip_limit=None, dirty_scan_limit: int = 16,
-                 max_capacity: int = 0, track_io: bool = False):
+                 max_capacity: int = 0, track_io: bool = False,
+                 max_small_frac: float = 0.0, max_ghost_frac: float = 0.0,
+                 min_small_frac: float = 1.0):
         self.track_io = track_io  # mark entries DOING-IO until io_done()
         self.max_capacity = max(capacity, max_capacity or capacity)
         self._small_frac = small_frac
@@ -85,9 +87,17 @@ class ProdClock2QPlus:
         self.skip_limit = skip_limit
         self.dirty_scan_limit = dirty_scan_limit
 
-        ms = max(1, int(round(self.max_capacity * small_frac)))
-        mm = max(1, self.max_capacity - ms)
-        mg = max(1, int(round(self.max_capacity * ghost_frac)))
+        # Preallocation fractions: the small/ghost maxima cover fractions
+        # up to max_small_frac, and the MAIN maximum covers fractions
+        # down to min_small_frac (a smaller small queue means a larger
+        # main), so ``retune`` can move the boundary either way at
+        # runtime without the logical sizes clamping below capacity.
+        ms = max(1, int(round(self.max_capacity
+                              * max(small_frac, max_small_frac))))
+        mm = max(1, self.max_capacity - max(1, int(round(
+            self.max_capacity * min(small_frac, min_small_frac)))))
+        mg = max(1, int(round(self.max_capacity
+                              * max(ghost_frac, max_ghost_frac))))
         self.max_small, self.max_main, self.max_ghost = ms, mm, mg
         n_ent = ms + mm
 
@@ -157,6 +167,40 @@ class ProdClock2QPlus:
         if tail.size:
             for off in np.nonzero(tail != EMPTY)[0].tolist():
                 self._ghost_remove_slot(self.ghost_cap + off)
+
+    @property
+    def tuning(self) -> dict:
+        """Current tuning knobs (what ``retune`` retargets)."""
+        return dict(small_frac=self._small_frac, ghost_frac=self._ghost_frac,
+                    window_frac=self._window_frac)
+
+    def retune(self, *, small_frac: float | None = None,
+               ghost_frac: float | None = None,
+               window_frac: float | None = None) -> None:
+        """Runtime tuning setter (the OnlineTuner hook): retarget the
+        correlation window and/or the small/ghost fractions of a LIVE
+        cache.  The window change is immediate; segment boundaries move
+        via the live-resize protocol — ``begin_resize`` at the current
+        capacity recomputes them (``set_capacity`` clamps to the
+        preallocated maxima, so payload handles never move) and entries
+        stranded beyond a shrunken boundary drain through ``resize_step``
+        exactly as a capacity resize would."""
+        # validate everything BEFORE assigning anything: a rejected call
+        # must not leave half-applied fractions for a later resize to
+        # silently activate
+        if small_frac is not None and not (0.0 < small_frac <= 1.0):
+            raise ValueError(f"small_frac {small_frac} not in (0, 1]")
+        if ghost_frac is not None and ghost_frac < 0.0:
+            raise ValueError(f"ghost_frac {ghost_frac} < 0")
+        if window_frac is not None and window_frac < 0.0:
+            raise ValueError(f"window_frac {window_frac} < 0")
+        if small_frac is not None:
+            self._small_frac = small_frac
+        if ghost_frac is not None:
+            self._ghost_frac = ghost_frac
+        if window_frac is not None:
+            self._window_frac = window_frac
+        self.begin_resize(self.capacity)
 
     # -- hashing ---------------------------------------------------------------
     def _h(self, key: int, n_buckets: int) -> int:

@@ -46,7 +46,8 @@ class BlockPool:
     def __init__(self, cfg: ModelConfig, n_hbm_blocks: int, block_size: int,
                  n_host_blocks: int = 0, dtype=jnp.float32, *,
                  window_frac: float = 0.5, max_hbm_blocks: int = 0,
-                 n_shards: int = 0, rebalance_headroom: float = 1.0):
+                 n_shards: int = 0, rebalance_headroom: float = 1.0,
+                 autotune=False):
         self.cfg = cfg
         self.bs = block_size
         self.n_blocks = n_hbm_blocks
@@ -56,16 +57,24 @@ class BlockPool:
         # rebalance_headroom=1.0 keeps the block arrays at the stated HBM
         # budget (cross-shard borrowing then needs max_hbm_blocks slack);
         # >1 preallocates extra blocks per shard for rebalancing.
+        tkw = dict(autotune) if isinstance(autotune, dict) else {}
+        # queue-fraction candidates need preallocation headroom (extra
+        # payload slots, hence extra HBM blocks) so the tuner's choices
+        # are realizable instead of silently clamped
+        seg_kw = dict(
+            max_small_frac=max(tkw.get("small_fracs") or (0.0,)),
+            min_small_frac=min(tkw.get("small_fracs") or (1.0,)),
+            max_ghost_frac=max(tkw.get("ghost_fracs") or (0.0,)))
         if n_shards > 1:
             self.policy = ShardedClock2QPlus(
                 n_hbm_blocks, n_shards=n_shards, track_io=True,
                 window_frac=window_frac,
                 max_capacity=max(n_hbm_blocks, max_hbm_blocks),
-                rebalance_headroom=rebalance_headroom)
+                rebalance_headroom=rebalance_headroom, **seg_kw)
         else:
             self.policy = ProdClock2QPlus(
                 n_hbm_blocks, track_io=True, window_frac=window_frac,
-                max_capacity=max(n_hbm_blocks, max_hbm_blocks))
+                max_capacity=max(n_hbm_blocks, max_hbm_blocks), **seg_kw)
         # the block arrays cover the policy's full payload-handle space
         # (>= n_hbm_blocks when resize headroom / sharding is configured)
         self.kpool = jnp.zeros((L, self.policy.n_slots, block_size, H, hd),
@@ -74,12 +83,24 @@ class BlockPool:
         self.host: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
         self.n_host_blocks = n_host_blocks or 4 * n_hbm_blocks
         self.stats = PoolStats()
+        # autotune=True (defaults) or a dict of OnlineTuner kwargs: the
+        # tuner observes the block-key stream through lookup() and
+        # retargets the policy's window / queue fractions online via the
+        # live-resize protocol.  Retuning never changes the preallocated
+        # payload-handle space, so the block arrays above stay valid.
+        self.tuner = None
+        if autotune:
+            from repro.tuning import OnlineTuner
+            tkw.setdefault("retune_every", max(1024, 32 * n_hbm_blocks))
+            self.tuner = OnlineTuner(self.policy, **tkw)
 
     # -- residency ------------------------------------------------------------
     def lookup(self, key: int, pin: bool = True) -> Tuple[int, bool]:
         """Returns (hbm_slot, needs_fill).  On miss, a slot is allocated
         (evicting per Clock2Q+); if the key has a host copy it is swapped
         in; otherwise the caller must fill the block (needs_fill=True)."""
+        if self.tuner is not None:
+            self.tuner.observe(key)
         r = self.policy.access(key, pin=pin)
         if r.hit:
             self.stats.hits += 1

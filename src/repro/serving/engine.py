@@ -47,7 +47,8 @@ class ServingEngine:
     def __init__(self, api: ModelAPI, params, *, block_size: int = 16,
                  hbm_blocks: int = 64, max_batch: int = 8,
                  max_blocks_per_seq: int = 64, n_shards: int = 0,
-                 max_hbm_blocks: int = 0, rebalance_headroom: float = 1.0):
+                 max_hbm_blocks: int = 0, rebalance_headroom: float = 1.0,
+                 autotune=False):
         assert api.cfg.family in ("dense", "vlm", "moe"), \
             "paged serving targets the attention-KV families"
         self.api = api
@@ -56,11 +57,15 @@ class ServingEngine:
         # rebalance_headroom > 1 (or max_hbm_blocks slack) is what lets
         # the sharded policy actually move capacity between shards — at
         # the cost of preallocating that many more HBM blocks
+        # autotune=True/dict turns on the OnlineTuner backend: the block
+        # pool's replacement knobs (correlation window, queue fractions)
+        # then track the serving workload online (repro.tuning).
         self.pool = BlockPool(api.cfg, hbm_blocks, block_size,
                               dtype=jnp.dtype(api.cfg.dtype),
                               n_shards=n_shards,
                               max_hbm_blocks=max_hbm_blocks,
-                              rebalance_headroom=rebalance_headroom)
+                              rebalance_headroom=rebalance_headroom,
+                              autotune=autotune)
         self.mgr = PagedKVManager(api.cfg, self.pool)
         self.max_batch = max_batch
         self.max_blocks = max_blocks_per_seq

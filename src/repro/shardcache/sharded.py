@@ -72,7 +72,9 @@ class ShardedClock2QPlus:
                  small_frac: float = 0.1, ghost_frac: float = 0.5,
                  window_frac: float = 0.5, skip_limit=None,
                  dirty_scan_limit: int = 16, max_capacity: int = 0,
-                 track_io: bool = False, rebalance_headroom: float = 2.0):
+                 track_io: bool = False, rebalance_headroom: float = 2.0,
+                 max_small_frac: float = 0.0, max_ghost_frac: float = 0.0,
+                 min_small_frac: float = 1.0):
         if n_shards < 1:
             raise ValueError("n_shards must be >= 1")
         if capacity < n_shards * MIN_SHARD_CAP:
@@ -94,7 +96,10 @@ class ShardedClock2QPlus:
             ProdClock2QPlus(c, small_frac=small_frac, ghost_frac=ghost_frac,
                             window_frac=window_frac, skip_limit=skip_limit,
                             dirty_scan_limit=dirty_scan_limit,
-                            max_capacity=self.shard_max, track_io=track_io)
+                            max_capacity=self.shard_max, track_io=track_io,
+                            max_small_frac=max_small_frac,
+                            max_ghost_frac=max_ghost_frac,
+                            min_small_frac=min_small_frac)
             for c in caps]
         self.locks = [threading.Lock() for _ in range(n_shards)]
         self.stride = self.shards[0].max_small + self.shards[0].max_main
@@ -349,6 +354,32 @@ class ShardedClock2QPlus:
             self.set_shard_capacities(caps, steps_per_call=steps_per_call,
                                       complete=complete)
             return caps
+
+    # -- runtime tuning (OnlineTuner hook) ------------------------------------------
+    @property
+    def tuning(self) -> Dict[str, float]:
+        """Current tuning knobs (uniform across shards by construction;
+        ``retune`` retargets every shard with the same values)."""
+        return self.shards[0].tuning
+
+    def retune(self, *, small_frac: Optional[float] = None,
+               ghost_frac: Optional[float] = None,
+               window_frac: Optional[float] = None,
+               steps_per_call: int = 64, complete: bool = True) -> None:
+        """Apply one tuning decision (made from AGGREGATED stats — the
+        shards all serve slices of the same workload) to every shard via
+        each shard's live-resize protocol.  Like ``set_shard_capacities``,
+        ``complete=True`` drives all migratable work and leaves shards
+        with pinned/DOING-IO strays pending for ``rebalance_step``."""
+        with self._mutate_lock:
+            for i, s in enumerate(self.shards):
+                with self.locks[i]:
+                    s.retune(small_frac=small_frac, ghost_frac=ghost_frac,
+                             window_frac=window_frac)
+                with self._resize_lock:
+                    self._resizing.add(i)
+            if complete:
+                drive_resize(self, steps_per_call)
 
     # -- whole-service resize (BlockPool compatibility) -----------------------------
     def begin_resize(self, new_capacity: int) -> None:

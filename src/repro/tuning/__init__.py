@@ -1,0 +1,30 @@
+"""Batched MRC sweeps + online autotuning — the tuning subsystem.
+
+The paper argues Clock2Q+ "is both easy to tune and implement" and shows
+it with an offline window sweep (fig13).  This package turns that story
+into a runtime capability:
+
+  * ``sweep`` — a vmap-batched sweep engine on the capacity-masked
+    Clock2Q+ state machine: a full tuning grid (capacities x correlation
+    windows x small/ghost fractions) simulated in ONE jitted
+    ``lax.scan``, each lane bit-for-bit equal to the serial
+    ``core.jax_engine`` replay at that configuration.
+  * ``profiler`` — spatially-sampled mini-simulation (hash-sample the
+    key space to ~1/64 of the stream, scale capacities by the rate) so
+    MRC estimation is cheap enough to run continuously.
+  * ``tuner`` — ``OnlineTuner``: periodically re-profiles the recent
+    access window and retargets a live ``ProdClock2QPlus`` /
+    ``ShardedClock2QPlus`` through the ``retune`` runtime setter (built
+    on the live-resize protocol, §4.2 — no pause, exact lookups
+    mid-migration).  Opt in from ``kvcache.pool.BlockPool`` / the
+    serving engine with ``autotune=``.
+"""
+
+from repro.tuning.sweep import (  # noqa: F401
+    SweepConfig, grid_init, grid_step, make_grid, mrc_grid, relabel,
+    serial_sweep_hits, sweep_grid, sweep_hits,
+)
+from repro.tuning.profiler import (  # noqa: F401
+    estimate_mrc, estimate_sweep, sample_mask, sample_trace,
+)
+from repro.tuning.tuner import OnlineTuner, TuneDecision  # noqa: F401

@@ -1,0 +1,84 @@
+"""Spatially-sampled mini-simulation MRC profiler (the SHARDS idea).
+
+Exact MRC estimation replays every request; continuous online profiling
+can't afford that.  Instead, sample the KEY SPACE with a hash: a key is
+in the sample iff ``mix64(key) mod 2**rate_shift == 0``, so roughly a
+``1/2**rate_shift`` fraction of the stream survives — and, crucially,
+every surviving key keeps its FULL access sequence (spatial sampling
+preserves per-key temporal patterns, unlike request subsampling).  The
+sampled stream is then simulated at capacities scaled by the sampling
+rate; the resulting miss ratios estimate the full-trace miss ratios at
+the original capacities.
+
+The mix is a splitmix64 finalizer — deliberately distinct from both the
+shard-selection hash (``shardcache.hashing``) and the bucket hash
+(``ProdClock2QPlus._h``) so the sample is uncorrelated with shard or
+bucket placement.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+from repro.tuning.sweep import (
+    SweepConfig, make_grid, surface_shape, sweep_grid,
+)
+
+_MASK64 = np.uint64(0xFFFFFFFFFFFFFFFF)
+
+
+def mix64(keys: np.ndarray) -> np.ndarray:
+    """Vectorized splitmix64 finalizer (uint64 in/out)."""
+    z = np.asarray(keys).astype(np.uint64)
+    z = (z + np.uint64(0x9E3779B97F4A7C15)) & _MASK64
+    z = ((z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)) & _MASK64
+    z = ((z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)) & _MASK64
+    return z ^ (z >> np.uint64(31))
+
+
+def sample_mask(keys: np.ndarray, rate_shift: int = 6) -> np.ndarray:
+    """True for keys in the spatial sample (~``2**-rate_shift`` of the
+    key space; ``rate_shift=0`` keeps everything)."""
+    if rate_shift <= 0:
+        return np.ones(np.asarray(keys).shape, dtype=bool)
+    return (mix64(keys) & np.uint64((1 << rate_shift) - 1)) == 0
+
+
+def sample_trace(trace: np.ndarray, rate_shift: int = 6) -> np.ndarray:
+    """The subsequence of ``trace`` whose keys fall in the sample, in
+    request order (~1/64 of the stream at the default shift)."""
+    trace = np.asarray(trace)
+    return trace[sample_mask(trace, rate_shift)]
+
+
+def scale_capacity(capacity: int, rate_shift: int, floor: int = 4) -> int:
+    """Cache size for the mini-simulation: capacity x sampling rate."""
+    return max(floor, int(round(capacity / (1 << rate_shift))))
+
+
+def scaled_configs(configs: Sequence[SweepConfig],
+                   rate_shift: int) -> list:
+    return [SweepConfig(scale_capacity(c.capacity, rate_shift),
+                        c.window_frac, c.small_frac, c.ghost_frac,
+                        c.skip_limit) for c in configs]
+
+
+def estimate_sweep(trace: np.ndarray, configs: Sequence[SweepConfig],
+                   rate_shift: int = 6) -> np.ndarray:
+    """Estimated full-trace miss ratio for each (full-scale) config, from
+    one batched mini-simulation of the sampled stream."""
+    sampled = sample_trace(trace, rate_shift)
+    if sampled.size == 0:
+        return np.full(len(configs), np.nan)
+    return sweep_grid(sampled, scaled_configs(configs, rate_shift))
+
+
+def estimate_mrc(trace: np.ndarray, capacities: Sequence[int],
+                 window_fracs: Sequence[float] = (0.5,),
+                 rate_shift: int = 6, **kw) -> np.ndarray:
+    """Sampled MRC estimate, shaped like ``sweep.mrc_grid``'s output."""
+    grid = make_grid(capacities, window_fracs, **kw)
+    est = estimate_sweep(trace, grid, rate_shift)
+    return est.reshape(surface_shape(len(grid), capacities, window_fracs))

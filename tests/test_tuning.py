@@ -1,0 +1,364 @@
+"""Tuning-subsystem tests: exact parity of the batched grid sweep with
+serial replays, sampled-MRC estimation error, the runtime ``retune``
+setter on the live-resize protocol, and OnlineTuner behaviour/invariants
+(standalone and sharded) including the convergence acceptance criterion."""
+
+import numpy as np
+import pytest
+
+from repro.core import make_policy, traces
+from repro.core.prodcache import EMPTY, ProdClock2QPlus, drive_resize
+from repro.shardcache import ShardedClock2QPlus
+from repro.tuning import (
+    OnlineTuner, estimate_sweep, make_grid, sample_trace, serial_sweep_hits,
+    sweep_grid, sweep_hits,
+)
+
+ACCEPT_SPECS = traces.SUITE[:3]  # >= 3 SUITE traces (acceptance criterion)
+
+
+def _mixed_trace(seed, T=2500, U=300):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, U, T // 2)
+    b = np.arange(T // 2) % (U + 50)
+    out = np.empty(T, np.int64)
+    out[0::2] = a
+    out[1::2] = b
+    return out
+
+
+def _meta_prefix(spec, n=100_000):
+    return traces.derive_metadata(spec.data())[:n]
+
+
+# -- invariant checker (run after every tuning/resize step) ---------------------
+
+def check_invariants(cache) -> None:
+    """Structural invariants of the production cache(s): payload handles
+    unique and disjoint from the free list, every resident key reachable
+    through the hash, ghost keys reachable through the ghost hash, and
+    (when no resize is pending) residency within the logical bounds and
+    the window consistent with the live tuning."""
+    shards = cache.shards if isinstance(cache, ShardedClock2QPlus) else [cache]
+    for s in shards:
+        live = s.block[s.key != EMPTY].tolist()
+        assert len(set(live)) == len(live), "duplicate payload handles"
+        assert set(s.free_blocks).isdisjoint(live)
+        assert len(s.free_blocks) + len(live) == s.n_slots
+        for eid in np.nonzero(s.key != EMPTY)[0].tolist():
+            k = int(s.key[eid])
+            assert s.contains(k), f"resident key {k} unreachable"
+            assert s.slot_of(k) == int(s.block[eid])
+        for g in np.nonzero(s.gkey != EMPTY)[0].tolist():
+            if g < s.ghost_cap:
+                assert s._ghost_lookup(int(s.gkey[g])) == g
+        assert s.window == int(round(s._window_frac * s.small_cap))
+        if not s.rehash_pending() and s.undrained_count() == 0:
+            assert len(s) <= s.small_cap + s.main_cap
+            assert s.spos < s.small_cap and s.hand < s.main_cap
+            assert s.gpos < s.ghost_cap
+
+
+# -- batched sweep engine --------------------------------------------------------
+
+def test_batched_sweep_matches_serial_replays_exactly():
+    """Acceptance: a full >=8x4 grid in ONE jitted call, every config's
+    hit count equal to its serial jax_engine replay."""
+    trace = _mixed_trace(0)
+    grid = make_grid([8, 12, 16, 24, 32, 48, 64, 96], (0.1, 0.3, 0.5, 1.0))
+    assert len(grid) == 32
+    hb = sweep_hits(trace, grid)
+    hs = serial_sweep_hits(trace, grid)
+    assert (hb == hs).all(), np.nonzero(hb != hs)
+
+
+def test_batched_sweep_frac_and_skiplimit_variants_exact():
+    trace = _mixed_trace(1)
+    grid = (make_grid([24, 60], (0.3, 1.0), small_fracs=(0.05, 0.25),
+                      ghost_fracs=(0.25, 1.0))
+            + make_grid([16, 40], skip_limit=1)
+            + make_grid([16, 40], skip_limit=3))
+    assert (sweep_hits(trace, grid) == serial_sweep_hits(trace, grid)).all()
+
+
+def test_batched_sweep_matches_python_reference():
+    """Transitively the sweep matches the pure-Python zoo; spot-check a
+    few configurations directly (incl. non-default window/fractions)."""
+    from repro.tuning.sweep import relabel
+    trace = _mixed_trace(2)
+    trl, _ = relabel(trace)
+    grid = make_grid([30, 80], (0.1, 1.0), small_fracs=(0.2,))
+    hb = sweep_hits(trace, grid)
+    for cfg, h in zip(grid, hb):
+        pol = make_policy("clock2q+", cfg.capacity,
+                          small_frac=cfg.small_frac,
+                          ghost_frac=cfg.ghost_frac,
+                          window_frac=cfg.window_frac)
+        assert sum(pol.access(int(k)) for k in trl) == h, cfg
+
+
+# -- sampled MRC profiler --------------------------------------------------------
+
+@pytest.mark.parametrize("spec", traces.SUITE[:2], ids=lambda s: s.name)
+def test_sampled_mrc_close_to_exact(spec):
+    """Spatial sampling at ~1/16 keeps the MRC estimate within a few pp
+    of the exact curve (>=2 SUITE traces)."""
+    tr = _meta_prefix(spec, 80_000)
+    fp = traces.footprint(tr)
+    caps = [max(8, int(fp * f)) for f in (0.01, 0.02, 0.05, 0.1)]
+    grid = make_grid(caps)
+    exact = sweep_grid(tr, grid)
+    est = estimate_sweep(tr, grid, rate_shift=4)
+    assert np.isfinite(est).all()
+    assert np.abs(est - exact).max() < 0.04, (est, exact)
+    # the estimate preserves the MRC's monotone-in-capacity shape
+    assert (np.diff(est) <= 0.02).all()
+
+
+def test_sample_trace_is_spatial():
+    """Hash sampling keeps or drops a KEY wholesale (every occurrence)."""
+    tr = _mixed_trace(3)
+    sampled = sample_trace(tr, 3)
+    kept = set(sampled.tolist())
+    assert 0 < len(sampled) < len(tr)
+    for k in kept:
+        assert int((tr == k).sum()) == int((sampled == k).sum())
+
+
+# -- runtime retune setter -------------------------------------------------------
+
+def test_retune_runtime_setter_preserves_invariants():
+    p = ProdClock2QPlus(100, max_small_frac=0.3, max_ghost_frac=1.0)
+    rng = np.random.default_rng(4)
+    for k in rng.integers(0, 500, 3000):
+        p.access(int(k))
+    for kw in (dict(window_frac=1.0), dict(small_frac=0.25),
+               dict(small_frac=0.05, ghost_frac=1.0, window_frac=0.1),
+               dict(small_frac=0.1, ghost_frac=0.5, window_frac=0.5)):
+        p.retune(**kw)
+        drive_resize(p)
+        check_invariants(p)
+        for k in rng.integers(0, 500, 2000):
+            r = p.access(int(k))
+            assert 0 <= r.block < p.n_slots
+        check_invariants(p)
+    assert p.tuning == dict(small_frac=0.1, ghost_frac=0.5, window_frac=0.5)
+
+
+def test_retune_mid_resize_and_interleaved_accesses():
+    """Retuning composes with the live-resize protocol: lookups stay
+    exact while boundaries move under traffic."""
+    p = ProdClock2QPlus(60, max_capacity=120, max_small_frac=0.4)
+    rng = np.random.default_rng(5)
+    for k in rng.integers(0, 400, 2000):
+        p.access(int(k))
+    p.begin_resize(100)          # a capacity resize in flight...
+    p.retune(small_frac=0.35)    # ...retargeted by a tuning change
+    done = False
+    for k in rng.integers(0, 400, 1500):
+        resident = p.contains(int(k))
+        assert p.access(int(k)).hit == resident
+        done = p.resize_step(4)
+    while not done:
+        done = p.resize_step(64)
+    check_invariants(p)
+    assert p.small_cap == round(0.35 * 100)
+
+
+def test_retune_rejects_bad_fractions():
+    p = ProdClock2QPlus(50)
+    with pytest.raises(ValueError):
+        p.retune(small_frac=0.0)
+    with pytest.raises(ValueError):
+        p.retune(small_frac=1.5)
+    with pytest.raises(ValueError):
+        p.retune(ghost_frac=-0.1)
+    with pytest.raises(ValueError):
+        p.retune(window_frac=-1.0)
+    # a rejected call must not half-apply: the valid leading argument of
+    # an invalid call stays un-assigned
+    before = p.tuning
+    with pytest.raises(ValueError):
+        p.retune(small_frac=0.2, ghost_frac=-1.0)
+    assert p.tuning == before
+
+
+def test_sharded_retune_applies_to_all_shards():
+    sh = ShardedClock2QPlus(64, n_shards=4)
+    rng = np.random.default_rng(6)
+    for k in rng.integers(0, 400, 5000):
+        sh.access(int(k))
+    sh.retune(window_frac=1.0)
+    assert sh.tuning["window_frac"] == 1.0
+    for s in sh.shards:
+        assert s._window_frac == 1.0
+    check_invariants(sh)
+    hits = sh.access_many(rng.integers(0, 400, 5000))
+    assert hits.shape == (5000,)
+    check_invariants(sh)
+
+
+# -- OnlineTuner -----------------------------------------------------------------
+
+def _burst_trace(n=45_000, seed=3):
+    return traces.correlated_burst_trace(n, universe=1 << 15, alpha=0.9,
+                                         seed=seed)
+
+
+def test_tuner_applies_and_never_violates_invariants():
+    """The tuner retargets a live cache under traffic; the production
+    invariants must hold after every decision (applied or not)."""
+    tr = _burst_trace(40_000)
+    cap = max(10, int(0.02 * traces.footprint(tr)))
+    cache = ProdClock2QPlus(cap, window_frac=0.0)
+    tuner = OnlineTuner(cache, window_fracs=(0.0, 0.3, 1.0),
+                        retune_every=15_000, rate_shift=4, min_gain=0.002)
+    seen = 0
+    for k in tr:
+        cache.access(int(k))
+        tuner.observe(int(k))
+        if len(tuner.decisions) > seen:
+            seen = len(tuner.decisions)
+            check_invariants(cache)
+    assert seen >= 3
+    assert any(d.applied for d in tuner.decisions)
+    assert cache.tuning["window_frac"] != 0.0  # moved off the bad start
+    check_invariants(cache)
+
+
+def test_tuner_under_sharding_preserves_invariants():
+    tr = _burst_trace(20_000, seed=5)
+    cap = max(32, int(0.02 * traces.footprint(tr)))
+    sh = ShardedClock2QPlus(cap, n_shards=4, window_frac=0.0)
+    tuner = OnlineTuner(sh, window_fracs=(0.0, 0.3, 1.0),
+                        retune_every=8_000, rate_shift=4, min_gain=0.002)
+    seen = 0
+    for k in tr:
+        sh.access(int(k))
+        tuner.observe(int(k))
+        if len(tuner.decisions) > seen:
+            seen = len(tuner.decisions)
+            check_invariants(sh)
+    assert seen >= 2
+    check_invariants(sh)
+    # one tuning decision retargets every shard identically
+    fracs = {s._window_frac for s in sh.shards}
+    assert len(fracs) == 1
+
+
+def test_candidate_grid_drops_unrealizable_fractions():
+    """Fraction candidates the preallocation cannot realize are filtered
+    (they would silently clamp — up-tuning past max_small, or
+    down-tuning into a main larger than max_main, which would shrink the
+    effective capacity); headroom knobs widen the search space."""
+    plain = ProdClock2QPlus(100)
+    t = OnlineTuner(plain, small_fracs=(0.05, 0.1, 0.3))
+    sfs = {c.small_frac for c in t.candidate_grid()}
+    assert sfs == {0.1}  # 0.3 exceeds max_small; 0.05 would clamp main
+    roomy = ProdClock2QPlus(100, max_small_frac=0.3, min_small_frac=0.05)
+    t = OnlineTuner(roomy, small_fracs=(0.05, 0.1, 0.3))
+    assert {0.05, 0.1, 0.3} <= {c.small_frac for c in t.candidate_grid()}
+    # a realizable down-tune keeps the full logical capacity
+    roomy.retune(small_frac=0.05)
+    drive_resize(roomy)
+    assert roomy.small_cap + roomy.main_cap == roomy.capacity
+    check_invariants(roomy)
+
+
+def test_candidate_grid_carries_live_skip_limit():
+    """Estimates must simulate the eviction policy the cache runs —
+    including the convention mismatch: prod None = unlimited = sweep 0,
+    and prod 0 forces after one skip, i.e. sweep 1."""
+    p = ProdClock2QPlus(100, skip_limit=8)
+    assert all(c.skip_limit == 8 for c in OnlineTuner(p).candidate_grid())
+    assert all(c.skip_limit == 0
+               for c in OnlineTuner(ProdClock2QPlus(100)).candidate_grid())
+    zero = ProdClock2QPlus(100, skip_limit=0)
+    assert all(c.skip_limit == 1 for c in OnlineTuner(zero).candidate_grid())
+
+
+def test_tuner_observe_many_matches_observe():
+    """Batched observation fills the same window and fires the same
+    profiling rounds as per-access observation."""
+    tr = _burst_trace(12_000, seed=9)
+    cap = max(10, int(0.05 * traces.footprint(tr)))
+
+    def mk():
+        return OnlineTuner(ProdClock2QPlus(cap), window_fracs=(0.1, 1.0),
+                           retune_every=10_000, rate_shift=3,
+                           min_gain=10.0)  # never applies: pure profiling
+    a, b = mk(), mk()
+    for k in tr:
+        a.observe(int(k))
+    for lo in range(0, len(tr), 3_000):
+        b.observe_many(tr[lo:lo + 3_000])
+    assert a.n_observed == b.n_observed
+    assert np.array_equal(a.recent(), b.recent())
+    assert len(a.decisions) == len(b.decisions) >= 2
+    for da, db in zip(a.decisions, b.decisions):
+        assert da.chosen == db.chosen and da.rate_shift == db.rate_shift
+
+
+def test_tuner_debounce_needs_consecutive_wins():
+    """A single winning round must not retarget the cache."""
+    tr = _burst_trace(20_000, seed=7)
+    cap = max(10, int(0.02 * traces.footprint(tr)))
+    cache = ProdClock2QPlus(cap, window_frac=0.0)
+    tuner = OnlineTuner(cache, window_fracs=(0.0, 1.0), retune_every=6_000,
+                        rate_shift=4, min_gain=0.002, confirm_rounds=10_000)
+    for k in tr:
+        cache.access(int(k))
+        tuner.observe(int(k))
+    assert tuner.decisions and not any(d.applied for d in tuner.decisions)
+    assert cache.tuning["window_frac"] == 0.0
+
+
+@pytest.mark.parametrize("spec", ACCEPT_SPECS, ids=lambda s: s.name)
+def test_tuner_convergence_acceptance(spec):
+    """Acceptance: from a deliberately bad correlation window, the tuner
+    converges to a window whose full-trace miss ratio is within 1pp of
+    the best offline fig13-style sweep value, on >=3 SUITE traces."""
+    tr = _meta_prefix(spec, 100_000)
+    cap = traces.suite_capacity(tr)
+    wfs = (0.1, 0.3, 0.5, 1.0)
+    offline = sweep_grid(tr, make_grid([cap], wfs))
+    best = float(offline.min())
+    cache = ProdClock2QPlus(cap, window_frac=8.0)  # deliberately bad
+    tuner = OnlineTuner(cache, window_fracs=wfs, retune_every=25_000,
+                        rate_shift=4, min_gain=0.001)
+    for k in tr:
+        cache.access(int(k))
+        tuner.observe(int(k))
+    check_invariants(cache)
+    final_wf = cache.tuning["window_frac"]
+    final = float(sweep_grid(tr, make_grid([cap], [final_wf]))[0])
+    assert final - best < 0.01, (spec.name, final_wf, final, best)
+
+
+# -- BlockPool / serving integration ---------------------------------------------
+
+def test_blockpool_autotune_backend():
+    from repro.configs import get_config, reduced
+    from repro.kvcache.pool import BlockPool
+    cfg = reduced(get_config("granite-3-8b"))
+    pool = BlockPool(cfg, 32, 8, autotune=dict(
+        window_fracs=(0.1, 0.5, 1.0), retune_every=600, rate_shift=2,
+        min_gain=0.0, min_samples=64))
+    assert pool.tuner is not None and pool.tuner.cache is pool.policy
+    rng = np.random.default_rng(0)
+    for k in rng.integers(0, 120, 2500):
+        slot, needs_fill = pool.lookup(int(k), pin=False)
+        assert 0 <= slot < pool.policy.n_slots
+        if needs_fill:
+            pool.policy.io_done(int(k))
+    assert pool.tuner.decisions  # the tuner profiled the stream
+    check_invariants(pool.policy)
+    # sharded policy backend + autotune compose
+    pool = BlockPool(cfg, 32, 8, n_shards=4, autotune=dict(
+        retune_every=600, rate_shift=2, min_gain=0.0, min_samples=64))
+    for k in rng.integers(0, 120, 1500):
+        slot, needs_fill = pool.lookup(int(k), pin=False)
+        if needs_fill:
+            pool.policy.io_done(int(k))
+    assert pool.tuner.decisions
+    check_invariants(pool.policy)

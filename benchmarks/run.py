@@ -14,7 +14,7 @@ import sys
 import time
 from pathlib import Path
 
-from benchmarks import paper_figs, perf, shard, tuning
+from benchmarks import paper_figs, perf, scenarios, shard, tuning
 
 BENCHES = [
     ("fig7", paper_figs.fig7_fidelity),
@@ -25,6 +25,7 @@ BENCHES = [
     ("fig12", paper_figs.fig12_skiplimit),
     ("fig13", paper_figs.fig13_window),
     ("fig14", paper_figs.fig14_nonblock),
+    ("fig_scenario_matrix", scenarios.fig_scenario_matrix),
     ("fig_shard", shard.fig_shard_fidelity),
     ("fig_shard_jax", shard.fig_shard_jax_fidelity),
     ("fig_sampled_mrc", tuning.fig_sampled_mrc),

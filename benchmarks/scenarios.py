@@ -1,0 +1,43 @@
+"""Scenario-zoo benchmarks: every policy x every registered scenario.
+
+``fig_scenario_matrix`` is the coverage table the ROADMAP's "as many
+scenarios as you can imagine" goal is measured by: one miss-ratio row per
+(scenario, policy) pair, all workloads resolved by name from
+``repro.core.traces.SCENARIOS``.  The reduced REPRO_BENCH_CI=1 tier
+(shorter streams, headline policies) is what the bench-regression gate
+pins in benchmarks/baseline.json.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks import common
+from repro.core import traces
+
+# deterministic generation seed for the matrix (baseline.json depends on it)
+SEED = 11
+
+
+def _policies() -> List[str]:
+    from benchmarks.paper_figs import HEADLINE, ZOO
+    return ZOO if common.FULL else HEADLINE
+
+
+def _length() -> int:
+    if common.FULL:
+        return 400_000
+    return 60_000 if common.CI else 150_000
+
+
+def fig_scenario_matrix() -> List[str]:
+    rows = []
+    n = _length()
+    for name in traces.scenario_names():
+        tr = traces.make_trace(name, n=n, seed=SEED)
+        cap = traces.suite_capacity(tr)
+        for pol in _policies():
+            r, us = common.timed_sim(pol, tr, cap)
+            rows.append(common.row(
+                f"fig_scenario_matrix/{name}/{pol}", us, r.miss_ratio))
+    return rows

@@ -439,6 +439,94 @@ def replay_np(policy: str, trace: np.ndarray, capacity: int,
     return h, 1.0 - h / max(1, len(trace))
 
 
+# =============================================================================
+# chunked state-carry replay (streaming traces through TraceStore chunks)
+# =============================================================================
+
+@functools.lru_cache(maxsize=1)
+def _replay_carry():
+    """Resolved lazily so importing this module never initializes a JAX
+    backend (device probing can hang minutes in hermetic environments).
+    Donating the carried state lets XLA reuse its buffers across chunk
+    calls (the state never needs two live copies); the CPU backend
+    ignores donation with a warning, so only request it where it's
+    implemented."""
+    if jax.default_backend() == "cpu":
+        return replay
+    return jax.jit(
+        lambda policy, state, trace: jax.lax.scan(
+            _POLICIES[policy][1], state, trace),
+        static_argnums=(0,), donate_argnums=(1,))
+
+
+def replay_chunked(policy: str, chunks, capacity: int, universe: int,
+                   state: Dict | None = None, **kw):
+    """Replay an iterable of key chunks, threading the scan state across
+    chunk boundaries.  ``lax.scan`` is sequential, so splitting a trace
+    at ANY boundary and carrying the state is bit-identical to the
+    single-shot ``replay`` of the concatenated trace (asserted in
+    tests/test_chunked.py) — but peak memory holds one chunk, not the
+    trace.  Chunks of equal length share one compiled executable; only a
+    ragged tail chunk triggers a second compile.
+
+    Returns ``(hits, n_requests, final_state)`` — pass ``state`` back in
+    to continue a stream across calls.
+    """
+    universe = int(universe)
+    if not (0 < universe <= np.iinfo(np.int32).max):
+        # Keys are int32 ids with dense (universe,)-sized location tables:
+        # raw production obj_ids (sparse/hashed 64-bit) must be relabelled
+        # first — tuning.sweep.relabel in memory, or once on disk with
+        # `python -m repro.traceio.convert --relabel`.
+        raise ValueError(
+            f"universe {universe} does not fit the engine's dense int32 id "
+            "space; relabel the trace to [0, n_unique) first "
+            "(repro.tuning.sweep.relabel or convert --relabel)")
+    st = init_state(policy, capacity, universe, **kw) \
+        if state is None else state
+    carry = _replay_carry()
+    hits = 0
+    n = 0
+    for chunk in chunks:
+        arr = np.ascontiguousarray(chunk)
+        # negative keys appear when hashed obj_ids >= 2**63 wrap through
+        # the oracleGeneral uint64->int64 load — reject those too, or they
+        # would wrap-index the dense tables instead of erroring
+        if arr.size and (int(arr.max()) >= universe or int(arr.min()) < 0):
+            bad = int(arr.max()) if int(arr.max()) >= universe \
+                else int(arr.min())
+            raise ValueError(
+                f"chunk contains key {bad} outside [0, {universe}); "
+                "relabel the trace (convert --relabel) or pass a larger "
+                "universe")
+        st, h = carry(policy, st, jnp.asarray(arr, jnp.int32))
+        hits += int(np.asarray(jnp.sum(h)))
+        n += int(arr.shape[0])
+    return hits, n, st
+
+
+def replay_store(policy: str, store, capacity: int,
+                 universe: int | None = None,
+                 chunk_size: int = 1 << 20, **kw):
+    """``replay_np`` for an on-disk trace: stream a ``TraceStore`` (or
+    anything ``repro.traceio.iter_chunks`` accepts) in ``chunk_size``
+    pieces.  Returns (hit count, miss ratio), bit-identical to loading
+    the whole trace and calling ``replay_np``."""
+    from repro.traceio.store import TraceStore, iter_chunks
+
+    if universe is None:
+        if isinstance(store, TraceStore):
+            universe = store.universe(chunk_size)
+        elif isinstance(store, np.ndarray):
+            universe = int(store.max()) + 1
+        else:
+            raise ValueError("pass universe= explicitly when streaming "
+                             "from a one-shot chunk iterable")
+    h, n, _ = replay_chunked(policy, iter_chunks(store, chunk_size),
+                             capacity, int(universe), **kw)
+    return h, 1.0 - h / max(1, n)
+
+
 def replay_batch(policy: str, states: Dict, traces: jnp.ndarray):
     """vmap over leading lane axis of both states and traces."""
     _, step = _POLICIES[policy]

@@ -476,6 +476,22 @@ class ProdClock2QPlus:
             eid = self._find_stray(key)
         return EMPTY if eid == EMPTY else int(self.block[eid])
 
+    def replay(self, source, chunk_size: int = 1 << 20) -> int:
+        """Replay a request stream (ndarray, ``repro.traceio.TraceStore``,
+        or any iterable of key chunks) through ``access``; returns the hit
+        count (``hits``/``misses`` counters advance as usual).  The cache
+        is stateful, so chunked streaming is state-carry by construction:
+        any chunk_size is bit-identical to replaying the whole trace in
+        one call, with peak memory bounded by the chunk."""
+        from repro.traceio.store import iter_chunks
+
+        acc = self.access
+        hits = 0
+        for chunk in iter_chunks(source, chunk_size):
+            for k in np.asarray(chunk).tolist():
+                hits += acc(k).hit
+        return hits
+
     @property
     def n_slots(self) -> int:
         """Size of the payload-handle space (preallocated entry count)."""

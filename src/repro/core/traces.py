@@ -13,13 +13,19 @@ pattern *classes* the paper's analysis relies on:
   * ``object_trace`` — skewed key-value/object workloads with churn, for the
     non-block evaluation (Fig. 14).
 
-All generators are pure functions of their seed.
+All generators are pure functions of their seed, and every workload class
+is registered by name in ``SCENARIOS`` (the scenario zoo): benchmarks,
+the conformance suite, and the ``repro.traceio.convert`` CLI resolve
+workloads with ``make_trace(name, n=..., seed=...)`` instead of hardcoding
+generator calls.  Register new classes with ``register_scenario``.
 """
 
 from __future__ import annotations
 
+import dataclasses
 from collections import OrderedDict
 from dataclasses import dataclass
+from typing import Callable, Dict
 
 import numpy as np
 
@@ -185,6 +191,106 @@ def correlated_burst_trace(n_ops: int, universe: int = 1 << 16,
     return np.asarray(out, dtype=np.int64)
 
 
+# =============================================================================
+# additional workload classes (the scenario zoo beyond the paper's three)
+# =============================================================================
+
+def cyclic_loop_trace(n: int, universe: int = 1 << 15, loop_frac: float = 0.8,
+                      noise_frac: float = 0.05, seed: int = 0) -> np.ndarray:
+    """Repeated sequential loop over ``loop_frac`` of the id space with a
+    sprinkle of uniform noise — the classic LRU-adversarial scan/loop
+    pattern (every reuse distance equals the loop length)."""
+    rng = np.random.default_rng(seed)
+    loop_len = max(1, int(round(loop_frac * universe)))
+    out = (np.arange(n, dtype=np.int64) % loop_len)
+    noise = rng.random(n) < noise_frac
+    out[noise] = rng.integers(0, universe, int(noise.sum()))
+    return out
+
+
+def multi_tenant_trace(n: int, universe: int = 1 << 18, n_tenants: int = 4,
+                       alphas=(1.3, 1.1, 0.9, 0.7),
+                       weights=(0.4, 0.3, 0.2, 0.1),
+                       seed: int = 0) -> np.ndarray:
+    """``n_tenants`` workloads with disjoint key ranges and different
+    skews, interleaved by traffic weight — the consolidated-cluster mix a
+    shared metadata cache actually serves."""
+    rng = np.random.default_rng(seed)
+    if not (len(alphas) == len(weights) == n_tenants):
+        raise ValueError("need one alpha and one weight per tenant")
+    w = np.asarray(weights, dtype=np.float64)
+    w = w / w.sum()
+    tenant = rng.choice(n_tenants, size=n, p=w)
+    span = universe // n_tenants
+    out = np.empty(n, dtype=np.int64)
+    for t in range(n_tenants):
+        idx = np.nonzero(tenant == t)[0]
+        if idx.size == 0:
+            continue
+        sub = zipf_trace(idx.size, max(1, span), alpha=float(alphas[t]),
+                         seed=seed + 101 * (t + 1))
+        out[idx] = t * span + sub
+    return out
+
+
+def diurnal_trace(n: int, universe: int = 1 << 18, hot_frac: float = 0.05,
+                  n_periods: float = 2.0, alpha: float = 1.2,
+                  seed: int = 0) -> np.ndarray:
+    """Day/night drift: a Zipf-hot window of ``hot_frac * universe`` keys
+    whose center moves sinusoidally across the id space, so the working
+    set is stable locally but turns over completely every half period."""
+    rng = np.random.default_rng(seed)
+    width = max(1, int(round(hot_frac * universe)))
+    offsets = zipf_trace(n, width, alpha=alpha, seed=seed + 7)
+    phase = 2.0 * np.pi * n_periods * np.arange(n) / max(1, n)
+    center = ((0.5 + 0.5 * np.sin(phase)) * (universe - width)).astype(np.int64)
+    cold = rng.random(n) < 0.02
+    out = center + offsets
+    out[cold] = rng.integers(0, universe, int(cold.sum()))
+    return out
+
+
+def flash_crowd_trace(n: int, universe: int = 1 << 18, crowd_size: int = 64,
+                      crowd_start: float = 0.4, crowd_len: float = 0.2,
+                      crowd_frac: float = 0.8, alpha: float = 1.1,
+                      seed: int = 0) -> np.ndarray:
+    """Steady Zipf background with a flash crowd: mid-trace, most traffic
+    suddenly hammers ``crowd_size`` previously-cold keys, then stops —
+    tests how fast admission reacts to (and recovers from) a hot-set
+    inversion."""
+    rng = np.random.default_rng(seed)
+    out = zipf_trace(n, universe - crowd_size, alpha=alpha, seed=seed + 3)
+    lo = int(crowd_start * n)
+    hi = min(n, lo + int(crowd_len * n))
+    in_crowd = np.zeros(n, dtype=bool)
+    in_crowd[lo:hi] = rng.random(hi - lo) < crowd_frac
+    # crowd keys live at the top of the id space: cold before the spike
+    out[in_crowd] = (universe - crowd_size
+                     + rng.integers(0, crowd_size, int(in_crowd.sum())))
+    return out
+
+
+def ghost_thrash_trace(n: int, set_size: int = 4096,
+                       seed: int = 0) -> np.ndarray:
+    """Adversarial ghost-thrash: a strict round-robin over ``set_size``
+    keys.  Every reuse distance equals ``set_size``, so for any cache
+    smaller than that every access misses, re-enters via the Ghost ring,
+    and churns the Main Clock — the worst case for ghost-based admission
+    (the N+1-loop analogue of the paper's scan resistance discussion)."""
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(set_size).astype(np.int64)
+    return perm[np.arange(n, dtype=np.int64) % set_size]
+
+
+def metadata_trace(n: int, fanout: int = DEFAULT_FANOUT,
+                   universe: int = 1 << 21, seed: int = 0,
+                   **storage_kw) -> np.ndarray:
+    """Composite storage trace pushed through the paper's §2.3 metadata
+    derivation at an arbitrary fanout (one scenario per tree geometry)."""
+    data = storage_data_trace(n, universe=universe, seed=seed, **storage_kw)
+    return derive_metadata(data, fanout=fanout)
+
+
 @dataclass(frozen=True)
 class TraceSpec:
     """Named, seeded workload used across benchmarks (a stand-in for one
@@ -216,6 +322,58 @@ class TraceSpec:
         return derive_metadata(self.data(), fanout)
 
 
+# =============================================================================
+# scenario registry — the named workload zoo
+# =============================================================================
+
+@dataclass(frozen=True)
+class Scenario:
+    """A named, seeded workload class.  ``generate(n, seed)`` returns the
+    request stream to feed a cache (length ~= n; some generators emit a
+    few extra requests, e.g. injected RMW duplicates)."""
+    name: str
+    description: str
+    generator: Callable[..., np.ndarray]
+    defaults: tuple = ()  # ((param, value), ...) — hashable
+
+    def generate(self, n: int, seed: int = 0, **overrides) -> np.ndarray:
+        params = dict(self.defaults)
+        params.update(overrides)
+        return np.asarray(self.generator(n, seed=seed, **params),
+                          dtype=np.int64)
+
+
+SCENARIOS: Dict[str, Scenario] = {}
+
+
+def register_scenario(name: str, description: str,
+                      generator: Callable[..., np.ndarray],
+                      **defaults) -> Scenario:
+    """Register a workload class under ``name`` (last registration wins,
+    so tests can shadow).  ``generator(n, seed=..., **defaults)`` must be
+    a pure function of its arguments."""
+    sc = Scenario(name, description, generator, tuple(sorted(defaults.items())))
+    SCENARIOS[name] = sc
+    return sc
+
+
+def scenario_names() -> list:
+    return sorted(SCENARIOS)
+
+
+def get_scenario(name: str) -> Scenario:
+    try:
+        return SCENARIOS[name]
+    except KeyError:
+        raise KeyError(f"unknown scenario {name!r}; registered: "
+                       f"{scenario_names()}") from None
+
+
+def make_trace(name: str, n: int, seed: int = 0, **overrides) -> np.ndarray:
+    """Resolve a scenario by name and generate its request stream."""
+    return get_scenario(name).generate(n, seed=seed, **overrides)
+
+
 # The benchmark suite: a spread of skews / scan intensities / localities /
 # run lengths, mirroring the diversity of the 106 CloudPhysics traces at
 # reduced scale.
@@ -235,6 +393,66 @@ SUITE = [
     TraceSpec("w08-random", n=400_000, universe=1 << 20, seed=808,
               zipf_alpha=1.0, frac_seq_in_file=0.15, frac_cold=0.15),
 ]
+
+_SUITE_DESCRIPTIONS = {
+    "w01-skewed": "highly skewed (Zipf 1.3) production block trace",
+    "w02-balanced": "balanced-skew (Zipf 1.0) production block trace",
+    "w03-seqheavy": "sequential-run-heavy block trace (85% seq, run 128)",
+    "w04-scans": "skewed block trace with periodic full-volume scans",
+    "w05-filtered": "block trace behind an upper-tier LRU (locality stripped)",
+    "w06-flat": "flat-skew small-run block trace",
+    "w07-drift": "working set drifts across 5 epochs",
+    "w08-random": "random-dominated block trace (15% cold, few runs)",
+}
+
+
+def _spec_generator(spec: TraceSpec):
+    def gen(n: int, seed: int = 0, **overrides) -> np.ndarray:
+        return dataclasses.replace(spec, n=n, seed=seed, **overrides).data()
+    return gen
+
+
+for _spec in SUITE:
+    register_scenario(_spec.name, _SUITE_DESCRIPTIONS[_spec.name],
+                      _spec_generator(_spec))
+
+register_scenario(
+    "zipf", "pure Zipf(1.2) popularity over a permuted id space",
+    zipf_trace, universe=1 << 17, alpha=1.2)
+register_scenario(
+    "object-churn", "skewed key-value workload with arrival churn (Fig. 14)",
+    object_trace)
+register_scenario(
+    "correlated-burst",
+    "every logical op re-touches its block within a short window (§2.2)",
+    correlated_burst_trace)
+register_scenario(
+    "cyclic-loop", "sequential loop larger than the cache (LRU-adversarial)",
+    cyclic_loop_trace)
+register_scenario(
+    "multi-tenant", "4 tenants, disjoint ranges, different skews, 40/30/20/10",
+    multi_tenant_trace)
+register_scenario(
+    "diurnal", "Zipf-hot window drifting sinusoidally across the id space",
+    diurnal_trace)
+register_scenario(
+    "flash-crowd", "sudden mid-trace spike on previously-cold keys",
+    flash_crowd_trace)
+register_scenario(
+    "write-heavy-rmw",
+    "write-heavy block trace: 45% read-modify-write duplication",
+    storage_data_trace, universe=1 << 19, frac_seq_in_file=0.3,
+    frac_rmw=0.45, rmw_gap=6)
+register_scenario(
+    "meta-fine", "metadata trace at fanout 16 (fine-grained tree leaves)",
+    metadata_trace, fanout=16, universe=1 << 19)
+register_scenario(
+    "meta-coarse", "metadata trace at fanout 1000 (coarse tree leaves)",
+    metadata_trace, fanout=1000, universe=1 << 21)
+register_scenario(
+    "ghost-thrash",
+    "adversarial round-robin: every reuse lands in the Ghost ring",
+    ghost_thrash_trace)
 
 
 def footprint(trace: np.ndarray) -> int:

@@ -85,6 +85,37 @@ def replay_threaded(cache: ShardedClock2QPlus, trace: np.ndarray,
                         n_requests=n, seconds=dt, hits=sum(hit_counts))
 
 
+def replay_store(cache: ShardedClock2QPlus, store, *, n_threads: int = 1,
+                 batch_size: int = 1024,
+                 chunk_size: int = 1 << 20) -> ReplayReport:
+    """Chunked state-carry replay of an on-disk trace (``TraceStore``,
+    ndarray, or any iterable of key chunks) through a sharded cache.
+
+    The cache is stateful, so feeding chunks sequentially IS the
+    state-carry; and because ``access_many`` preserves per-shard request
+    order regardless of batch boundaries (shards are independent),
+    single-threaded streaming is bit-identical to a single-shot
+    ``replay_threaded`` of the whole trace, for any chunk_size (asserted
+    in tests/test_chunked.py).  With ``n_threads > 1`` the harness's
+    relaxed cross-batch ordering applies exactly as in the single-shot
+    path: workers race on per-shard order across batches, so hit counts
+    can drift by a few per million vs serial — a property of threaded
+    replay itself, not of chunking.  Peak memory holds one chunk."""
+    from repro.traceio.store import iter_chunks
+
+    hits = 0
+    n = 0
+    seconds = 0.0
+    for chunk in iter_chunks(store, chunk_size):
+        rep = replay_threaded(cache, chunk, n_threads=n_threads,
+                              batch_size=batch_size)
+        hits += rep.hits
+        n += rep.n_requests
+        seconds += rep.seconds
+    return ReplayReport(n_threads=n_threads, n_shards=cache.n_shards,
+                        n_requests=n, seconds=seconds, hits=hits)
+
+
 def scalability_sweep(trace: np.ndarray, capacity: int, *,
                       n_shards: int = 8,
                       threads: Iterable[int] = (1, 2, 4, 8),

@@ -1,0 +1,26 @@
+"""Trace I/O + streaming subsystem.
+
+The paper's evaluation replays multi-hundred-million-access production
+traces (CloudPhysics, Meta, Tencent); this package is the repro's path to
+that scale: on-disk trace formats (the libCacheSim-compatible
+``oracleGeneral`` binary layout, CSV, npz, raw npy), a ``TraceStore``
+that mmaps a trace and yields fixed-size chunks so replay runs in
+bounded memory regardless of trace length, and a ``convert`` CLI
+(``python -m repro.traceio.convert``) that translates between formats
+and materializes any registered scenario (``repro.core.traces.SCENARIOS``)
+to disk.
+
+Chunked *state-carry* replay drivers live next to their engines
+(``core.jax_engine.replay_chunked``/``replay_store``,
+``shardcache.replay.replay_store``, ``tuning.profiler.
+estimate_sweep_stream``, ``ProdClock2QPlus.replay``); each is
+bit-identical to its single-shot path — asserted in
+tests/test_chunked.py.
+"""
+
+from repro.traceio.formats import (  # noqa: F401
+    ORACLE_DTYPE, load_trace, relabel, save_trace, sniff_format,
+    read_csv, read_npy, read_npz, read_oracle,
+    write_csv, write_npy, write_npz, write_oracle,
+)
+from repro.traceio.store import TraceStore, iter_chunks  # noqa: F401

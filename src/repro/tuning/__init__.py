@@ -21,10 +21,11 @@ into a runtime capability:
 """
 
 from repro.tuning.sweep import (  # noqa: F401
-    SweepConfig, grid_init, grid_step, make_grid, mrc_grid, relabel,
-    serial_sweep_hits, sweep_grid, sweep_hits,
+    SweepConfig, grid_init, grid_step, lane_hits, make_grid, mrc_grid,
+    relabel, serial_sweep_hits, sweep_grid, sweep_hits,
 )
 from repro.tuning.profiler import (  # noqa: F401
-    estimate_mrc, estimate_sweep, sample_mask, sample_trace,
+    estimate_mrc, estimate_sweep, estimate_sweep_store,
+    estimate_sweep_stream, sample_mask, sample_stream, sample_trace,
 )
 from repro.tuning.tuner import OnlineTuner, TuneDecision  # noqa: F401

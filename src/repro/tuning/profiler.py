@@ -75,6 +75,40 @@ def estimate_sweep(trace: np.ndarray, configs: Sequence[SweepConfig],
     return sweep_grid(sampled, scaled_configs(configs, rate_shift))
 
 
+def sample_stream(chunks, rate_shift: int = 6) -> np.ndarray:
+    """Spatial sample of a CHUNKED stream: the mask is a pure per-key
+    function, so sampling each chunk and concatenating is bit-identical
+    to ``sample_trace`` of the concatenated trace — this is what makes
+    SHARDS-style profiling streamable.  The returned sample (~1/2**shift
+    of the stream) is the only thing held in memory."""
+    parts = [c[sample_mask(c, rate_shift)]
+             for c in (np.asarray(c) for c in chunks)]
+    if not parts:
+        return np.empty(0, dtype=np.int64)
+    return np.concatenate(parts)
+
+
+def estimate_sweep_stream(chunks, configs: Sequence[SweepConfig],
+                          rate_shift: int = 6) -> np.ndarray:
+    """``estimate_sweep`` over a chunk iterable (e.g. ``TraceStore.
+    chunks()``): bounded memory in the trace length, bit-identical to
+    the whole-trace estimate (asserted in tests/test_chunked.py)."""
+    sampled = sample_stream(chunks, rate_shift)
+    if sampled.size == 0:
+        return np.full(len(configs), np.nan)
+    return sweep_grid(sampled, scaled_configs(configs, rate_shift))
+
+
+def estimate_sweep_store(store, configs: Sequence[SweepConfig],
+                         rate_shift: int = 6,
+                         chunk_size: int = 1 << 20) -> np.ndarray:
+    """Sampled sweep straight off an on-disk trace (TraceStore/ndarray)."""
+    from repro.traceio.store import iter_chunks
+
+    return estimate_sweep_stream(iter_chunks(store, chunk_size), configs,
+                                 rate_shift)
+
+
 def estimate_mrc(trace: np.ndarray, capacities: Sequence[int],
                  window_fracs: Sequence[float] = (0.5,),
                  rate_shift: int = 6, **kw) -> np.ndarray:

@@ -201,10 +201,36 @@ def _sweep_hits(states: Dict, trace: jnp.ndarray) -> jnp.ndarray:
     return jax.vmap(lane)(states)
 
 
+@jax.jit
+def _lane_hit_arrays(states: Dict, trace: jnp.ndarray) -> jnp.ndarray:
+    def lane(st):
+        _, hits = jax.lax.scan(grid_step, st, trace)
+        return hits
+
+    return jax.vmap(lane)(states)
+
+
+def lane_hits(trace: np.ndarray, config: SweepConfig,
+              universe: int | None = None) -> np.ndarray:
+    """Per-request bool hit array for ONE grid configuration — the
+    conformance hook: lets tests/test_conformance.py compare the sweep
+    engine hit-for-hit against the other four Clock2Q+ implementations
+    (``sweep_hits`` only exposes per-lane counts).  ``trace`` must already
+    be dense int ids in [0, universe)."""
+    trace = np.asarray(trace)
+    if universe is None:
+        universe = int(trace.max()) + 1
+    states = grid_init([config], int(universe))
+    hits = _lane_hit_arrays(states, jnp.asarray(trace, jnp.int32))
+    return np.asarray(hits)[0].astype(bool)
+
+
 def relabel(trace: np.ndarray) -> Tuple[np.ndarray, int]:
-    """Dense relabelling: raw (possibly 64-bit) keys -> [0, n_unique)."""
-    uniq, inv = np.unique(np.asarray(trace), return_inverse=True)
-    return inv.astype(np.int32), int(uniq.size)
+    """Dense relabelling: raw (possibly 64-bit) keys -> [0, n_unique).
+    (Shared implementation: ``repro.traceio.formats.relabel``.)"""
+    from repro.traceio.formats import relabel as _relabel
+
+    return _relabel(trace)
 
 
 def sweep_hits(trace: np.ndarray, configs: Sequence[SweepConfig],

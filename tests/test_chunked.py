@@ -1,0 +1,113 @@
+"""Chunked state-carry replay == single-shot replay, bit for bit.
+
+Each replay engine grew a streaming path (trace arrives as fixed-size
+chunks, state threaded across chunk boundaries); these tests pin every
+one of them to its single-shot twin.  Chunk sizes are chosen odd and
+smaller than the Clock2Q+ correlation window, so chunk boundaries land
+mid-window and mid-sequential-run — the cases where a state-carry bug
+would actually show.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import jax_engine as je
+from repro.core import traces
+from repro.core.prodcache import ProdClock2QPlus
+from repro.shardcache import ShardedClock2QPlus
+from repro.shardcache.replay import replay_store, replay_threaded
+from repro.traceio.store import iter_chunks
+from repro.tuning.profiler import estimate_sweep, estimate_sweep_stream
+from repro.tuning.sweep import SweepConfig, relabel
+
+CAP = 120  # small_frac 0.1 -> S=12, window=6: chunks of 7 straddle windows
+
+
+def _trace(n=12_000, scenario="w03-seqheavy", seed=21):
+    tr = traces.make_trace(scenario, n=n, seed=seed)[:n]
+    return relabel(tr)
+
+
+@pytest.mark.parametrize("chunk_size", [7, 1001, 12_000, 50_000])
+def test_jax_engine_chunked_matches_single_shot(chunk_size):
+    tr, uni = _trace()
+    h_ref, mr_ref = je.replay_np("clock2q+", tr, CAP, universe=uni)
+    h, n, st = je.replay_chunked("clock2q+", iter_chunks(tr, chunk_size),
+                                 CAP, uni)
+    assert (h, n) == (h_ref, len(tr))
+    # the carried final state must equal the single-shot final state too
+    st_ref, _ = je.replay("clock2q+", je.init_state("clock2q+", CAP, uni),
+                          np.asarray(tr, np.int32))
+    for k in st_ref:
+        assert np.array_equal(np.asarray(st_ref[k]), np.asarray(st[k])), k
+
+
+def test_jax_engine_state_resumes_across_calls():
+    """Passing the returned state back in continues the same stream."""
+    tr, uni = _trace(n=6_000)
+    h_ref, _ = je.replay_np("clock2q+", tr, CAP, universe=uni)
+    h1, n1, st = je.replay_chunked("clock2q+", iter_chunks(tr[:2_500], 997),
+                                   CAP, uni)
+    h2, n2, st = je.replay_chunked("clock2q+", iter_chunks(tr[2_500:], 997),
+                                   CAP, uni, state=st)
+    assert h1 + h2 == h_ref and n1 + n2 == len(tr)
+
+
+def test_sharded_replay_chunked_matches_single_shot():
+    """Single-threaded chunked streaming is bit-identical to single-shot
+    (per-shard order is preserved across any batch/chunk boundaries)."""
+    tr, _ = _trace(n=10_000)
+    ref_cache = ShardedClock2QPlus(CAP, n_shards=4)
+    ref = replay_threaded(ref_cache, tr, n_threads=1)
+    cache = ShardedClock2QPlus(CAP, n_shards=4)
+    rep = replay_store(cache, tr, n_threads=1, batch_size=256,
+                       chunk_size=1003)
+    assert rep.hits == ref.hits and rep.n_requests == ref.n_requests
+    assert rep.miss_ratio == ref.miss_ratio
+
+
+def test_sharded_replay_chunked_threaded_fidelity():
+    """Multi-threaded streaming inherits replay_threaded's relaxed
+    cross-batch ordering (workers race on per-shard order), so it is NOT
+    bit-exact vs serial — but every request is still replayed exactly
+    once and the miss ratio stays within the harness's fidelity band."""
+    tr, _ = _trace(n=10_000)
+    ref_cache = ShardedClock2QPlus(CAP, n_shards=4)
+    ref = replay_threaded(ref_cache, tr, n_threads=1)
+    cache = ShardedClock2QPlus(CAP, n_shards=4)
+    rep = replay_store(cache, tr, n_threads=4, batch_size=256,
+                       chunk_size=1003)
+    assert rep.n_requests == ref.n_requests
+    assert abs(rep.miss_ratio - ref.miss_ratio) < 0.01
+
+
+@pytest.mark.parametrize("chunk_size", [13, 1777, 40_000])
+def test_sampled_profiler_stream_matches_whole(chunk_size):
+    tr, _ = _trace(n=20_000, scenario="w01-skewed")
+    configs = [SweepConfig(64), SweepConfig(256, window_frac=0.3)]
+    whole = estimate_sweep(tr, configs, rate_shift=3)
+    streamed = estimate_sweep_stream(iter_chunks(tr, chunk_size), configs,
+                                     rate_shift=3)
+    assert np.array_equal(whole, streamed, equal_nan=True)
+
+
+@pytest.mark.parametrize("chunk_size", [7, 911])
+def test_prodcache_replay_chunked_matches_single_shot(chunk_size):
+    tr, _ = _trace(n=8_000)
+    ref = ProdClock2QPlus(CAP)
+    h_ref = ref.replay(tr)
+    prod = ProdClock2QPlus(CAP)
+    h = prod.replay(iter_chunks(tr, chunk_size))
+    assert h == h_ref == prod.hits
+    assert prod.misses == ref.misses
+    assert np.array_equal(prod.key, ref.key)  # identical final layout
+
+
+def test_chunk_boundary_mid_correlation_window_exactness():
+    """Adversarial boundary placement: chunk size 1 (every request its own
+    chunk) through a ghost-thrash stream — maximal boundary density on
+    the ghost/promote paths."""
+    tr, uni = _trace(n=600, scenario="ghost-thrash", seed=3)
+    h_ref, _ = je.replay_np("clock2q+", tr, 40, universe=uni)
+    h, n, _ = je.replay_chunked("clock2q+", iter_chunks(tr, 1), 40, uni)
+    assert (h, n) == (h_ref, len(tr))

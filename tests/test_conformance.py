@@ -1,0 +1,99 @@
+"""Cross-engine differential conformance suite.
+
+The codebase carries five independent Clock2Q+ implementations:
+
+  1. the pure-Python reference zoo (``repro.core.policies.clock2qplus``)
+  2. the vectorized JAX engine (``repro.core.jax_engine``)
+  3. the batched sweep engine's capacity-masked lane
+     (``repro.tuning.sweep.grid_step``)
+  4. the Pallas ``cache_sim`` TPU kernel (interpret mode on CPU)
+  5. the production array implementation (``ProdClock2QPlus``)
+
+Earlier tests spot-checked them pairwise; this suite locks them together
+hit-for-hit, parametrized over the whole scenario registry at three
+capacities.  All engines replay the SAME dense-relabeled stream
+(replacement is label-invariant), padded to a fixed power-of-two
+universe so the jitted engines compile once per capacity and are reused
+across every scenario.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import jax_engine as je
+from repro.core import make_policy, traces
+from repro.core.prodcache import ProdClock2QPlus
+from repro.tuning.sweep import SweepConfig, lane_hits, relabel
+
+N = 2500          # requests per scenario (sliced after generation)
+UNIVERSE = 4096   # shared dense-id space: one jit compile per capacity
+CAPS = (20, 80, 320)
+
+SCENARIOS = traces.scenario_names()
+
+
+def _dense_trace(scenario: str) -> np.ndarray:
+    tr = traces.make_trace(scenario, n=N, seed=13)[:N]
+    dense, n_unique = relabel(tr)
+    assert n_unique <= UNIVERSE, (scenario, n_unique)
+    return dense
+
+
+def _python_hits(trace, cap) -> np.ndarray:
+    pol = make_policy("clock2q+", cap)
+    return np.asarray([pol.access(int(k)) for k in trace], dtype=bool)
+
+
+def _prod_hits(trace, cap) -> np.ndarray:
+    prod = ProdClock2QPlus(cap)
+    return np.asarray([prod.access(int(k)).hit for k in trace], dtype=bool)
+
+
+def _jax_hits(trace, cap) -> np.ndarray:
+    import jax.numpy as jnp
+    st = je.init_state("clock2q+", cap, UNIVERSE)
+    _, hits = je.replay("clock2q+", st, jnp.asarray(trace, jnp.int32))
+    return np.asarray(hits).astype(bool)
+
+
+def _mismatch(a: np.ndarray, b: np.ndarray) -> str:
+    if a.shape != b.shape:
+        return f"shape {a.shape} vs {b.shape}"
+    bad = np.nonzero(a != b)[0]
+    return f"{bad.size} mismatches, first at request {bad[:5]}"
+
+
+@pytest.mark.conformance
+@pytest.mark.parametrize("scenario", SCENARIOS)
+def test_engines_agree_hit_for_hit(scenario):
+    """python zoo == jax_engine == sweep lane == ProdClock2QPlus, per
+    request, at three capacities."""
+    trace = _dense_trace(scenario)
+    for cap in CAPS:
+        ref = _python_hits(trace, cap)
+        for engine, fn in (
+                ("jax_engine", _jax_hits),
+                ("sweep_lane", lambda t, c: lane_hits(
+                    t, SweepConfig(c), universe=UNIVERSE)),
+                ("prodcache", _prod_hits)):
+            got = fn(trace, cap)
+            assert np.array_equal(ref, got), \
+                f"{scenario} cap={cap} {engine}: {_mismatch(ref, got)}"
+
+
+@pytest.mark.conformance
+@pytest.mark.slow
+@pytest.mark.parametrize("scenario", SCENARIOS)
+def test_pallas_kernel_agrees_hit_for_hit(scenario):
+    """The Pallas cache_sim kernel (interpret mode) vs the python
+    reference, per request, at three capacities (compile-heavy: one
+    pallas trace per capacity — marked slow)."""
+    from repro.kernels.cache_sim.ops import simulate_lanes
+
+    trace = _dense_trace(scenario)
+    for cap in CAPS:
+        ref = _python_hits(trace, cap)
+        _, hits = simulate_lanes(trace[None, :], cap, interpret=True)
+        got = np.asarray(hits)[0].astype(bool)
+        assert np.array_equal(ref, got), \
+            f"{scenario} cap={cap} pallas: {_mismatch(ref, got)}"

@@ -1,0 +1,233 @@
+"""Trace I/O subsystem tests: format round-trips, the oracleGeneral
+binary layout, TraceStore streaming, the convert CLI, and the
+large-trace acceptance run (20M accesses on disk, replayed in bounded
+memory, bit-identical to in-memory replay — marked slow)."""
+
+import os
+import struct
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.core import jax_engine as je
+from repro.core import traces
+from repro.traceio import (
+    ORACLE_DTYPE, TraceStore, iter_chunks, load_trace, save_trace,
+    sniff_format,
+)
+from repro.traceio.convert import main as convert_main
+
+FORMATS = ["oracle", "csv", "npz", "npy"]
+_EXT = {"oracle": "bin", "csv": "csv", "npz": "npz", "npy": "npy"}
+
+
+def _roundtrip(keys, fmt, tmp_path):
+    p = str(tmp_path / f"t.{_EXT[fmt]}")
+    save_trace(p, keys, fmt)
+    return load_trace(p, fmt)
+
+
+@pytest.mark.parametrize("fmt", FORMATS)
+def test_roundtrip_identity(fmt, tmp_path):
+    keys = traces.make_trace("w02-balanced", 5_000, seed=9)
+    back = _roundtrip(keys, fmt, tmp_path)
+    assert back.dtype == np.int64
+    assert np.array_equal(back, keys)
+
+
+def test_oracle_record_layout(tmp_path):
+    """Byte-level pin of the libCacheSim oracleGeneral layout: packed
+    little-endian <IQIq records with a correct next_access_vtime."""
+    assert ORACLE_DTYPE.itemsize == struct.calcsize("<IQIq") == 24
+    p = str(tmp_path / "t.bin")
+    save_trace(p, np.asarray([7, 9, 7], dtype=np.int64))
+    raw = open(p, "rb").read()
+    assert len(raw) == 72
+    assert struct.unpack("<IQIq", raw[0:24]) == (0, 7, 1, 2)   # 7 recurs at 2
+    assert struct.unpack("<IQIq", raw[24:48]) == (1, 9, 1, -1)  # never again
+    assert struct.unpack("<IQIq", raw[48:72]) == (2, 7, 1, -1)
+
+
+def test_sniff_format_and_errors(tmp_path):
+    assert sniff_format("x.bin") == "oracle"
+    assert sniff_format("x.csv") == "csv"
+    assert sniff_format("x.csv", "npy") == "npy"  # explicit wins
+    with pytest.raises(ValueError):
+        sniff_format("x.dat")
+    with pytest.raises(ValueError):
+        sniff_format("x.bin", "nope")
+    with pytest.raises(ValueError):
+        save_trace(str(tmp_path / "neg.npy"),
+                   np.asarray([-1, 2], dtype=np.int64))
+
+
+def test_csv_headerless_and_single_column(tmp_path):
+    p = str(tmp_path / "bare.csv")
+    with open(p, "w") as f:
+        f.write("5\n6\n5\n")
+    assert load_trace(p).tolist() == [5, 6, 5]
+    with open(p, "w") as f:
+        f.write("0,42,1\n1,43,1\n")  # no header
+    assert load_trace(p).tolist() == [42, 43]
+
+
+def test_csv_blank_lines_do_not_truncate(tmp_path):
+    """Leading blank lines (before or after the header) must not be
+    mistaken for an empty file — loadtxt skips them."""
+    p = str(tmp_path / "blank.csv")
+    with open(p, "w") as f:
+        f.write("\n1,2,3\n4,5,6\n")
+    assert load_trace(p).tolist() == [2, 5]
+    with open(p, "w") as f:
+        f.write("time,obj_id,obj_size\n\n1,2,3\n")
+    assert load_trace(p).tolist() == [2]
+    with open(p, "w") as f:
+        f.write("time,obj_id,obj_size\n\n\n")  # header + blanks only
+    assert load_trace(p).size == 0
+
+
+def test_store_chunks_reassemble_and_stats(tmp_path):
+    keys = traces.make_trace("zipf", 30_000, seed=4)
+    for fmt in ("oracle", "npy"):
+        p = str(tmp_path / f"s.{_EXT[fmt]}")
+        save_trace(p, keys, fmt)
+        store = TraceStore(p)
+        assert len(store) == keys.size
+        assert store.max_key() == int(keys.max())
+        parts = list(store.chunks(999))
+        assert all(c.size <= 999 for c in parts)  # bounded materialization
+        assert np.array_equal(np.concatenate(parts), keys)
+    with pytest.raises(ValueError):
+        TraceStore(str(tmp_path / "s.bin"), "csv")
+
+
+def test_iter_chunks_sources():
+    arr = np.arange(10, dtype=np.int64)
+    assert np.array_equal(np.concatenate(list(iter_chunks(arr, 3))), arr)
+    pre = [arr[:4], arr[4:]]
+    assert np.array_equal(np.concatenate(list(iter_chunks(pre))), arr)
+    with pytest.raises(TypeError):
+        list(iter_chunks(42))
+
+
+def test_convert_cli_roundtrip_and_scenario(tmp_path, capsys):
+    src = str(tmp_path / "in.npz")
+    dst = str(tmp_path / "out.bin")
+    keys = traces.make_trace("cyclic-loop", 2_000, seed=2)
+    save_trace(src, keys)
+    assert convert_main([src, dst]) == 0
+    assert np.array_equal(load_trace(dst), keys)
+    out = str(tmp_path / "scen.npy")
+    assert convert_main(["--scenario", "ghost-thrash", "--n", "1000",
+                         "--seed", "5", out]) == 0
+    assert np.array_equal(load_trace(out),
+                          traces.make_trace("ghost-thrash", 1000, seed=5))
+    assert convert_main(["--list-scenarios"]) == 0
+    assert "ghost-thrash" in capsys.readouterr().out
+    assert convert_main(["--info", dst]) == 0
+    assert f"n={keys.size}" in capsys.readouterr().out
+
+
+def test_convert_relabel_densifies_sparse_ids(tmp_path):
+    """Raw production obj_ids are sparse/hashed 64-bit; --relabel maps
+    them to [0, n_unique) so the dense-table engines can ingest them."""
+    from repro.tuning.sweep import relabel
+
+    sparse = np.asarray([1 << 40, 7, 1 << 40, (1 << 62) - 1, 7],
+                        dtype=np.int64)
+    src = str(tmp_path / "sparse.bin")
+    dst = str(tmp_path / "dense.npy")
+    save_trace(src, sparse)
+    assert convert_main(["--relabel", src, dst]) == 0
+    dense = load_trace(dst)
+    expect, n_unique = relabel(sparse)
+    assert np.array_equal(dense, expect) and int(dense.max()) == n_unique - 1
+    # and the engine refuses the un-relabelled trace loudly
+    with pytest.raises(ValueError, match="relabel"):
+        je.replay_store("clock2q+", TraceStore(src), 16)
+    with pytest.raises(ValueError, match="universe"):
+        je.replay_chunked("clock2q+", iter_chunks(dense, 2), 16, universe=2)
+    # hashed obj_ids >= 2**63 wrap negative through the uint64->int64
+    # load: they must hit the loud guard, not wrap-index the tables
+    wrapped = np.asarray([3, -(1 << 62), 5], dtype=np.int64)
+    with pytest.raises(ValueError, match="relabel"):
+        je.replay_chunked("clock2q+", iter_chunks(wrapped, 2), 16,
+                          universe=64)
+
+
+# -- property tests (hypothesis) ----------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # optional dev dependency, matching test_property.py
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    keys_strategy = st.lists(
+        st.integers(min_value=0, max_value=(1 << 62) - 1),
+        min_size=0, max_size=300)
+
+    @settings(max_examples=20, deadline=None)
+    @given(keys=keys_strategy, fmt=st.sampled_from(FORMATS))
+    def test_write_read_roundtrip_property(keys, fmt):
+        arr = np.asarray(keys, dtype=np.int64)
+        with tempfile.TemporaryDirectory() as d:
+            p = os.path.join(d, f"t.{_EXT[fmt]}")
+            save_trace(p, arr, fmt)
+            assert np.array_equal(load_trace(p, fmt), arr)
+
+    @settings(max_examples=20, deadline=None)
+    @given(keys=st.lists(st.integers(min_value=0, max_value=1 << 40),
+                         min_size=1, max_size=500),
+           chunk=st.integers(min_value=1, max_value=600),
+           fmt=st.sampled_from(["oracle", "npy"]))
+    def test_store_streaming_equals_whole_load_property(keys, chunk, fmt):
+        arr = np.asarray(keys, dtype=np.int64)
+        with tempfile.TemporaryDirectory() as d:
+            p = os.path.join(d, f"t.{_EXT[fmt]}")
+            save_trace(p, arr, fmt)
+            store = TraceStore(p)
+            streamed = np.concatenate(list(store.chunks(chunk)))
+            assert np.array_equal(streamed, store.keys())
+            assert np.array_equal(streamed, arr)
+else:  # pragma: no cover
+    @pytest.mark.skip(reason="optional dev dependency")
+    def test_traceio_property_suite():
+        pass
+
+
+# -- the acceptance run: >=20M accesses, on disk, bounded memory ---------------
+
+@pytest.mark.slow
+def test_20m_stream_replay_bit_identical(tmp_path):
+    """Replay a 20M-access on-disk trace through jax_engine via TraceStore
+    chunks: miss ratio bit-identical to the in-memory path, with per-chunk
+    materialization bounded by chunk_size (the in-memory path holds all
+    20M keys; the streamed path holds 1M at a time)."""
+    n = 20_000_000
+    set_size = 1 << 15
+    keys = traces.make_trace("ghost-thrash", n, seed=1, set_size=set_size)
+    assert keys.size >= 20_000_000
+    p = str(tmp_path / "big.npy")
+    save_trace(p, keys)
+
+    chunk = 1 << 20
+    store = TraceStore(p)
+    seen_max = 0
+
+    def bounded_chunks():
+        nonlocal seen_max
+        for c in store.chunks(chunk):
+            seen_max = max(seen_max, c.size)
+            yield c
+
+    h_stream, n_stream, _ = je.replay_chunked(
+        "fifo", bounded_chunks(), 4096, set_size)
+    assert n_stream == keys.size
+    assert seen_max <= chunk  # bounded memory: one chunk at a time
+
+    h_mem, mr_mem = je.replay_np("fifo", keys, 4096, universe=set_size)
+    assert h_stream == h_mem
+    assert 1.0 - h_stream / n_stream == mr_mem

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import os
 import time
-from typing import Dict, List, Tuple
+from typing import Dict, Tuple
 
 import numpy as np
 

@@ -26,6 +26,7 @@ BENCHES = [
     ("fig13", paper_figs.fig13_window),
     ("fig14", paper_figs.fig14_nonblock),
     ("fig_scenario_matrix", scenarios.fig_scenario_matrix),
+    ("fig_policy_tuning", scenarios.fig_policy_tuning),
     ("fig_shard", shard.fig_shard_fidelity),
     ("fig_shard_jax", shard.fig_shard_jax_fidelity),
     ("fig_sampled_mrc", tuning.fig_sampled_mrc),

@@ -5,7 +5,7 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from typing import Dict, List
+from typing import Dict
 
 from repro.models.config import ModelConfig
 

@@ -1,0 +1,280 @@
+"""The capacity-masked policy core: one masked ``step`` per policy
+family behind a ``PolicyEngine`` protocol.
+
+This package is the BOTTOM layer of the repo (enforced by
+tools/check_layering.py): it may import nothing above itself.  Every
+JAX-lane consumer — the serial replay drivers (``core.jax_engine``),
+the batched MRC sweep (``tuning.sweep``), the profiler/tuner, the
+shard-replay baselines, the Pallas oracle — resolves a registered
+engine here and calls the SAME step function:
+
+  * a single fixed-size simulation is the degenerate mask
+    (physical array sizes == logical sizes);
+  * a batched tuning grid pads every lane's arrays to the grid maxima
+    (``grid_init``) and vmaps the identical step.
+
+``PolicyEngine`` is a frozen dataclass (the protocol's concrete
+carrier): ``init`` / ``step`` / ``replay`` / ``replay_chunked`` /
+``lane_hits`` plus the family's config surface (``knobs``, ``preset``).
+Register new policies with ``register_engine`` — see the README's
+"adding a policy to the JAX lane" walkthrough.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import clock2qplus, s3fifo, simple
+from repro.core.engine.layout import (  # noqa: F401  (package API)
+    EMPTY, W_GHOST, W_MAIN, W_NONE, W_SMALL, SweepConfig, c2qp_sizes,
+    seg, sq_sizes,
+)
+from repro.core.engine.masked import mset  # noqa: F401  (package API)
+
+_FRAC_KNOBS = ("window_frac", "small_frac", "ghost_frac")
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyEngine:
+    """One registered policy family on the JAX lane.
+
+    ``knobs`` are the ``SweepConfig`` fields this family actually reads
+    (capacity is always read); the tuner collapses grid dimensions the
+    engine ignores.  ``preset`` overrides the SweepConfig defaults when
+    a config is built through ``config()`` — e.g. s3fifo's full-capacity
+    ghost ring, or clock2q's 2Q sizing on the clock2q+ core.
+    """
+    name: str
+    knobs: Tuple[str, ...]
+    sizes_fn: Callable[[SweepConfig], Tuple[int, ...]]
+    init_fn: Callable[..., Dict]
+    step_fn: Callable[[Dict, jnp.ndarray], Tuple[Dict, jnp.ndarray]]
+    preset: Mapping[str, object] = dataclasses.field(default_factory=dict)
+
+    # -- config / state construction ------------------------------------------
+    def config(self, capacity: int, **kw) -> SweepConfig:
+        """A ``SweepConfig`` for this policy with the engine's own
+        defaults applied (explicit kwargs win over the preset)."""
+        return SweepConfig(int(capacity), policy=self.name,
+                           **{**dict(self.preset), **kw})
+
+    def init_config(self, cfg: SweepConfig, universe: int,
+                    phys: Optional[Tuple[int, ...]] = None) -> Dict:
+        """Masked state for ``cfg``; ``phys`` pads to grid maxima."""
+        return self.init_fn(cfg, int(universe), phys)
+
+    def init(self, capacity: int, universe: int, **kw) -> Dict:
+        """Degenerate-mask state for a single configuration."""
+        return self.init_config(self.config(capacity, **kw), universe)
+
+    # -- replay ---------------------------------------------------------------
+    def step(self, state: Dict, key) -> Tuple[Dict, jnp.ndarray]:
+        return self.step_fn(state, key)
+
+    def replay(self, state: Dict, trace) -> Tuple[Dict, jnp.ndarray]:
+        return replay(self.name, state, trace)
+
+    def replay_chunked(self, chunks, capacity: int, universe: int,
+                       state: Optional[Dict] = None, **kw):
+        return replay_chunked(self.name, chunks, capacity, universe,
+                              state=state, **kw)
+
+    def lane_hits(self, trace, config: Optional[SweepConfig] = None,
+                  universe: Optional[int] = None, **kw) -> np.ndarray:
+        if config is None:
+            config = self.config(**kw)
+        return lane_hits(trace, config, universe)
+
+
+# -- registry ------------------------------------------------------------------
+
+_REGISTRY: Dict[str, PolicyEngine] = {}
+
+
+def register_engine(engine: PolicyEngine) -> PolicyEngine:
+    """Register (or replace) a lane policy family by name."""
+    _REGISTRY[engine.name] = engine
+    return engine
+
+
+def get_engine(name: str) -> PolicyEngine:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"no registered lane engine {name!r}; "
+            f"known: {sorted(_REGISTRY)}") from None
+
+
+def engine_names() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+register_engine(PolicyEngine(
+    "clock2q+",
+    knobs=("window_frac", "small_frac", "ghost_frac", "skip_limit"),
+    sizes_fn=clock2qplus.sizes, init_fn=clock2qplus.init,
+    step_fn=clock2qplus.step))
+# Clock2Q == Clock2Q+ with 2Q sizing and the window covering the whole
+# Small FIFO (the ref bit is never set while resident there, §3.2) —
+# the same masked step, preset-sized.
+register_engine(PolicyEngine(
+    "clock2q",
+    knobs=("window_frac", "small_frac", "ghost_frac", "skip_limit"),
+    sizes_fn=clock2qplus.sizes, init_fn=clock2qplus.init,
+    step_fn=clock2qplus.step,
+    preset=dict(small_frac=0.25, window_frac=10.0)))
+register_engine(PolicyEngine(
+    "s3fifo",
+    knobs=("small_frac", "ghost_frac", "skip_limit", "bits"),
+    sizes_fn=s3fifo.sizes, init_fn=s3fifo.init, step_fn=s3fifo.step,
+    preset=dict(ghost_frac=1.0)))
+register_engine(PolicyEngine(
+    "fifo", knobs=(), sizes_fn=simple.sizes, init_fn=simple.fifo_init,
+    step_fn=simple.fifo_step))
+register_engine(PolicyEngine(
+    "clock", knobs=(), sizes_fn=simple.sizes, init_fn=simple.clock_init,
+    step_fn=simple.clock_step))
+register_engine(PolicyEngine(
+    "lru", knobs=(), sizes_fn=simple.sizes, init_fn=simple.lru_init,
+    step_fn=simple.lru_step))
+
+
+# -- generic replay drivers ----------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("policy",))
+def replay(policy: str, state: Dict, trace: jnp.ndarray):
+    """Replay one trace; returns (final_state, hits[bool per request])."""
+    return jax.lax.scan(get_engine(policy).step_fn, state, trace)
+
+
+@functools.lru_cache(maxsize=1)
+def _replay_carry():
+    """Resolved lazily so importing this package never initializes a JAX
+    backend (device probing can hang minutes in hermetic environments).
+    Donating the carried state lets XLA reuse its buffers across chunk
+    calls (the state never needs two live copies); the CPU backend
+    ignores donation with a warning, so only request it where it's
+    implemented."""
+    if jax.default_backend() == "cpu":
+        return replay
+    return jax.jit(
+        lambda policy, state, trace: jax.lax.scan(
+            get_engine(policy).step_fn, state, trace),
+        static_argnums=(0,), donate_argnums=(1,))
+
+
+def replay_chunked(policy: str, chunks, capacity: int, universe: int,
+                   state: Optional[Dict] = None, **kw):
+    """Replay an iterable of key chunks, threading the scan state across
+    chunk boundaries.  ``lax.scan`` is sequential, so splitting a trace
+    at ANY boundary and carrying the state is bit-identical to the
+    single-shot ``replay`` of the concatenated trace (asserted in
+    tests/test_chunked.py) — but peak memory holds one chunk, not the
+    trace.  Chunks of equal length share one compiled executable; only a
+    ragged tail chunk triggers a second compile.
+
+    Returns ``(hits, n_requests, final_state)`` — pass ``state`` back in
+    to continue a stream across calls.
+    """
+    universe = int(universe)
+    if not (0 < universe <= np.iinfo(np.int32).max):
+        # Keys are int32 ids with dense (universe,)-sized location tables:
+        # raw production obj_ids (sparse/hashed 64-bit) must be relabelled
+        # first — tuning.sweep.relabel in memory, or once on disk with
+        # `python -m repro.traceio.convert --relabel`.
+        raise ValueError(
+            f"universe {universe} does not fit the engine's dense int32 id "
+            "space; relabel the trace to [0, n_unique) first "
+            "(repro.tuning.sweep.relabel or convert --relabel)")
+    st = get_engine(policy).init(capacity, universe, **kw) \
+        if state is None else state
+    carry = _replay_carry()
+    hits = 0
+    n = 0
+    for chunk in chunks:
+        arr = np.ascontiguousarray(chunk)
+        # negative keys appear when hashed obj_ids >= 2**63 wrap through
+        # the oracleGeneral uint64->int64 load — reject those too, or they
+        # would wrap-index the dense tables instead of erroring
+        if arr.size and (int(arr.max()) >= universe or int(arr.min()) < 0):
+            bad = int(arr.max()) if int(arr.max()) >= universe \
+                else int(arr.min())
+            raise ValueError(
+                f"chunk contains key {bad} outside [0, {universe}); "
+                "relabel the trace (convert --relabel) or pass a larger "
+                "universe")
+        st, h = carry(policy, st, jnp.asarray(arr, jnp.int32))
+        hits += int(np.asarray(jnp.sum(h)))
+        n += int(arr.shape[0])
+    return hits, n, st
+
+
+# -- batched grids (the MRC sweep substrate) -----------------------------------
+
+def grid_init(configs: Sequence[SweepConfig], universe: int) -> Dict:
+    """Batched masked state: leading axis = len(configs); queue arrays
+    padded to the grid maxima, logical sizes as per-lane scalars.  All
+    configs must name the same policy (vmap lanes share a pytree
+    structure) — ``tuning.sweep`` partitions mixed grids by policy."""
+    if len(configs) == 0:
+        raise ValueError("empty sweep grid")
+    policies = {c.policy for c in configs}
+    if len(policies) != 1:
+        raise ValueError(
+            f"one grid_init call batches ONE policy, got {sorted(policies)}"
+            " — partition the grid by config.policy first")
+    eng = get_engine(configs[0].policy)
+    sizes = np.asarray([eng.sizes_fn(c) for c in configs], dtype=np.int64)
+    phys = tuple(int(x) for x in sizes.max(axis=0))
+    states = [eng.init_config(c, universe, phys) for c in configs]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
+
+
+@functools.partial(jax.jit, static_argnames=("policy",))
+def grid_hit_counts(policy: str, states: Dict,
+                    trace: jnp.ndarray) -> jnp.ndarray:
+    """All lanes x the whole trace in one compiled call; per-lane hit
+    counts (the full hit arrays are reduced on-device, so long traces
+    never materialize a lanes x T matrix on the host)."""
+    step = get_engine(policy).step_fn
+
+    def lane(st):
+        _, hits = jax.lax.scan(step, st, trace)
+        return jnp.sum(hits.astype(jnp.int32))
+
+    return jax.vmap(lane)(states)
+
+
+@functools.partial(jax.jit, static_argnames=("policy",))
+def grid_hit_arrays(policy: str, states: Dict,
+                    trace: jnp.ndarray) -> jnp.ndarray:
+    step = get_engine(policy).step_fn
+
+    def lane(st):
+        _, hits = jax.lax.scan(step, st, trace)
+        return hits
+
+    return jax.vmap(lane)(states)
+
+
+def lane_hits(trace: np.ndarray, config: SweepConfig,
+              universe: Optional[int] = None) -> np.ndarray:
+    """Per-request bool hit array for ONE grid configuration — the
+    conformance hook: lets tests/test_conformance.py compare the sweep
+    engine hit-for-hit against the other implementations
+    (``grid_hit_counts`` only exposes per-lane counts).  ``trace`` must
+    already be dense int ids in [0, universe)."""
+    trace = np.asarray(trace)
+    if universe is None:
+        universe = int(trace.max()) + 1
+    states = grid_init([config], int(universe))
+    hits = grid_hit_arrays(config.policy, states,
+                           jnp.asarray(trace, jnp.int32))
+    return np.asarray(hits)[0].astype(bool)

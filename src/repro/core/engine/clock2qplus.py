@@ -1,0 +1,151 @@
+"""THE canonical capacity-masked Clock2Q+ step (paper §3).
+
+This is the single implementation of the Clock2Q+ state machine on the
+JAX lane: the serial ``core.jax_engine`` replay, the batched MRC sweep
+(``tuning.sweep``) and the conformance suite all call this exact
+function.  A fixed-size single configuration is just the degenerate
+mask (physical sizes == logical sizes).
+
+The step is masked, not branched — two deliberate structural choices,
+both semantics-preserving (locked hit-for-hit against the pure-Python
+reference zoo and ``ProdClock2QPlus`` by tests/test_conformance.py) and
+both essential for grid throughput under vmap:
+
+  1. No lax.switch/cond.  Batched lanes diverge, so a switch executes
+     every branch and SELECTS whole state arrays — copying each lane's
+     (universe,)-sized location tables several times per request.  The
+     four cases are mutually exclusive per lane, so the step is written
+     as straight-line code with masked single-slot scatters (a False
+     mask rewrites the current value — a no-op).
+  2. No lax.while_loop for the clock sweep.  Lanes would advance in
+     lock-step.  The sweep is deterministic, so the victim is computed
+     in closed form: with cyclic distance ``d(slot) = (slot - hand)
+     mod mcap`` and ``skippable = occupied & ref``, the hand stops at
+     ``vd = min(first non-skippable d, skip_limit)`` (a full fruitless
+     lap clears every ref and takes the hand slot, ``vd = mcap``),
+     clearing the refs of exactly the ``d < vd`` slots it walked over.
+
+State layout: queue arrays at PHYSICAL (padded) sizes, logical segment
+sizes (``scap``/``mcap``/``gcap``) as scalars in the state, cursors
+wrapped modulo the logical sizes.  Padded slots start EMPTY and no
+cursor ever reaches them.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.engine.layout import (
+    EMPTY, W_GHOST, W_MAIN, W_NONE, W_SMALL, SweepConfig, c2qp_sizes,
+)
+from repro.core.engine.masked import mset as _mset
+
+
+def sizes(cfg: SweepConfig) -> Tuple[int, int, int]:
+    """Logical queue-array sizes (small, main, ghost) for one config."""
+    S, M, G, _ = c2qp_sizes(cfg.capacity, cfg.small_frac, cfg.ghost_frac,
+                            cfg.window_frac)
+    return S, M, G
+
+
+def init(cfg: SweepConfig, universe: int,
+         phys: Optional[Tuple[int, int, int]] = None) -> Dict:
+    """Masked state for one configuration.  ``phys`` pads the queue
+    arrays to grid-wide maxima (vmap lanes must share shapes); None
+    means the degenerate mask (physical == logical)."""
+    S, M, G, W = c2qp_sizes(cfg.capacity, cfg.small_frac, cfg.ghost_frac,
+                            cfg.window_frac)
+    pS, pM, pG = phys if phys is not None else (S, M, G)
+    return dict(
+        skey=jnp.full((pS,), EMPTY), sref=jnp.zeros((pS,), jnp.bool_),
+        sseq=jnp.zeros((pS,), jnp.int32), spos=jnp.int32(0),
+        seqctr=jnp.int32(0),
+        mkey=jnp.full((pM,), EMPTY), mref=jnp.zeros((pM,), jnp.bool_),
+        hand=jnp.int32(0),
+        gkey=jnp.full((pG,), EMPTY), gpos=jnp.int32(0),
+        loc_w=jnp.zeros((universe,), jnp.int8),
+        loc_s=jnp.zeros((universe,), jnp.int32),
+        scap=jnp.int32(S), mcap=jnp.int32(M), gcap=jnp.int32(G),
+        window=jnp.int32(W), skip_limit=jnp.int32(cfg.skip_limit),
+    )
+
+
+def step(st: Dict, key: jnp.ndarray) -> Tuple[Dict, jnp.ndarray]:
+    # key < 0 is a padding sentinel: every case mask goes False, so the
+    # step is a no-op and the (non-)hit never counts.  Lets callers pad
+    # traces to a bucketed length and reuse the compiled sweep.
+    active = key >= 0
+    key = jnp.maximum(key, 0)
+    where = st["loc_w"][key]
+    slot = st["loc_s"][key]
+    is_small = active & (where == W_SMALL)
+    is_main = active & (where == W_MAIN)
+    is_ghost = active & (where == W_GHOST)
+    is_none = active & (where == W_NONE)
+    hit = is_small | is_main
+
+    # -- hits: ref-bit updates (small obeys the correlation window) -----------
+    age_ok = (st["seqctr"] - st["sseq"][slot]) >= st["window"]
+    sref = _mset(st["sref"], slot, st["sref"][slot] | age_ok, is_small)
+    mref = _mset(st["mref"], slot, True, is_main)
+
+    # -- ghost hit: leave the ghost ring, then insert into main ---------------
+    gkey = _mset(st["gkey"], slot, EMPTY, is_ghost)
+    loc_w = _mset(st["loc_w"], key, W_NONE, is_ghost)
+    loc_s = st["loc_s"]
+
+    # -- miss: displace the small-FIFO cursor slot ----------------------------
+    spos = st["spos"]
+    displaced = st["skey"][spos]
+    disp = is_none & (displaced >= 0)
+    disp_promote = disp & sref[spos]
+    disp_demote = disp & ~sref[spos]
+    loc_w = _mset(loc_w, displaced, W_NONE, disp)
+
+    # demote path: ghost-push the displaced key
+    g = st["gpos"]
+    gold = gkey[g]
+    loc_w = _mset(loc_w, gold, W_NONE, disp_demote & (gold >= 0))
+    gkey = _mset(gkey, g, displaced, disp_demote)
+    loc_w = _mset(loc_w, displaced, W_GHOST, disp_demote)
+    loc_s = _mset(loc_s, displaced, g, disp_demote)
+    gpos = jnp.where(disp_demote, (g + 1) % st["gcap"], g)
+
+    # -- main insert (ghost hit or promoted displacee): closed-form clock -----
+    do_ins = is_ghost | disp_promote
+    ins_key = jnp.where(is_ghost, key, displaced)
+    M = st["mkey"].shape[-1]  # physical (padded) ring size — static
+    mcap, hand = st["mcap"], st["hand"]
+    idx = jnp.arange(M)
+    valid = idx < mcap
+    d = jnp.where(valid, (idx - hand) % mcap, M + 1)
+    skippable = (st["mkey"] >= 0) & mref
+    k = jnp.min(jnp.where(valid & ~skippable, d, M + 1))
+    k = jnp.minimum(k, mcap)  # no non-skippable slot: full lap
+    vd = jnp.where(st["skip_limit"] > 0,
+                   jnp.minimum(k, st["skip_limit"]), k)
+    ms = (hand + vd) % mcap
+    mref = jnp.where(do_ins, mref & ~(valid & (d < vd)), mref)
+    victim = st["mkey"][ms]
+    loc_w = _mset(loc_w, victim, W_NONE, do_ins & (victim >= 0))
+    loc_w = _mset(loc_w, ins_key, W_MAIN, do_ins)
+    loc_s = _mset(loc_s, ins_key, ms, do_ins)
+    mkey = _mset(st["mkey"], ms, ins_key, do_ins)
+    mref = _mset(mref, ms, False, do_ins)
+    hand = jnp.where(do_ins, (ms + 1) % mcap, hand)
+
+    # -- miss: the new key enters the small FIFO ------------------------------
+    skey = _mset(st["skey"], spos, key, is_none)
+    sref = _mset(sref, spos, False, is_none)
+    sseq = _mset(st["sseq"], spos, st["seqctr"], is_none)
+    loc_w = _mset(loc_w, key, W_SMALL, is_none)
+    loc_s = _mset(loc_s, key, spos, is_none)
+    spos = jnp.where(is_none, (spos + 1) % st["scap"], spos)
+    seqctr = jnp.where(is_none, st["seqctr"] + 1, st["seqctr"])
+
+    st = dict(st, skey=skey, sref=sref, sseq=sseq, spos=spos, seqctr=seqctr,
+              mkey=mkey, mref=mref, hand=hand, gkey=gkey, gpos=gpos,
+              loc_w=loc_w, loc_s=loc_s)
+    return st, hit

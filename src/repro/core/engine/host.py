@@ -1,0 +1,111 @@
+"""EngineCache — a host-side cache facade over any registered lane
+engine.
+
+``ProdClock2QPlus`` is the production-shaped Clock2Q+ (chained hash,
+pin/IO states, live resize); this is the *thin* counterpart for every
+OTHER registered policy: a stateful object with hit/miss counters and
+the small tuning surface the ``OnlineTuner`` speaks (``capacity`` /
+``tuning`` / ``retune`` / ``engine_policy``), backed by the exact
+masked step the MRC sweep simulates.  That closes the tuning loop for
+non-Clock2Q+ policies — the tuner's estimates describe precisely the
+machine serving the traffic, because they ARE the same machine.
+
+Keys must be dense int ids in ``[0, universe)`` (relabel first, like
+every lane consumer).  ``retune`` of the correlation window is a live
+in-place update (the window is a scalar in the engine state); changing
+queue FRACTIONS re-inits the state cold — this facade has no live
+resize protocol, and a cold restart is the honest semantics for a
+simulation-backed cache (documented here so nobody mistakes it for the
+§4.2 migration).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core.engine as engine
+from repro.core.engine import _FRAC_KNOBS
+from repro.core.engine.layout import SweepConfig, c2qp_sizes
+
+
+class EngineCache:
+    """A live cache running a registered lane engine on the host."""
+
+    def __init__(self, policy: str, capacity: int, universe: int, **knobs):
+        self.engine = engine.get_engine(policy)
+        self.engine_policy = policy
+        self.universe = int(universe)
+        self.config: SweepConfig = self.engine.config(capacity, **knobs)
+        self.state: Dict = self.engine.init_config(self.config, self.universe)
+        self.hits = 0
+        self.misses = 0
+
+    # -- identity / tuning surface (what OnlineTuner consumes) -----------------
+    @property
+    def capacity(self) -> int:
+        return self.config.capacity
+
+    @property
+    def tuning(self) -> Dict[str, float]:
+        """Current fraction knobs — only the ones this engine reads."""
+        return {k: getattr(self.config, k) for k in _FRAC_KNOBS
+                if k in self.engine.knobs}
+
+    @property
+    def lane_skip_limit(self) -> int:
+        """skip_limit already in the SweepConfig convention (0=unlimited)."""
+        return int(self.config.skip_limit)
+
+    # -- serving ---------------------------------------------------------------
+    def access(self, key: int) -> bool:
+        """Serve one access; returns hit?"""
+        return bool(self.access_many(np.asarray([key]))[0])
+
+    def access_many(self, keys) -> np.ndarray:
+        """Serve a batch of accesses in order; returns the bool hit array.
+        One jitted scan per call — amortize by batching."""
+        arr = np.ascontiguousarray(keys, dtype=np.int32)
+        if arr.size and (int(arr.max()) >= self.universe
+                         or int(arr.min()) < 0):
+            raise ValueError(
+                f"key outside [0, {self.universe}); relabel the trace first")
+        self.state, h = self.engine.replay(self.state,
+                                           jnp.asarray(arr, jnp.int32))
+        h = np.asarray(h).astype(bool)
+        nh = int(h.sum())
+        self.hits += nh
+        self.misses += int(arr.size) - nh
+        return h
+
+    @property
+    def miss_ratio(self) -> float:
+        n = self.hits + self.misses
+        return 1.0 if n == 0 else self.misses / n
+
+    # -- retuning --------------------------------------------------------------
+    def retune(self, *, small_frac: Optional[float] = None,
+               ghost_frac: Optional[float] = None,
+               window_frac: Optional[float] = None) -> None:
+        """Retarget the knobs.  Window-only changes apply LIVE (the
+        correlation window is a per-lane scalar in the masked state);
+        any queue-fraction change re-inits the state cold (no live
+        resize here — see the module docstring)."""
+        changes = {k: float(v) for k, v in (("small_frac", small_frac),
+                                            ("ghost_frac", ghost_frac),
+                                            ("window_frac", window_frac))
+                   if v is not None and k in self.engine.knobs
+                   and float(v) != getattr(self.config, k)}
+        if not changes:
+            return
+        new_cfg = dataclasses.replace(self.config, **changes)
+        if set(changes) == {"window_frac"} and "window" in self.state:
+            _, _, _, W = c2qp_sizes(new_cfg.capacity, new_cfg.small_frac,
+                                    new_cfg.ghost_frac, new_cfg.window_frac)
+            self.state["window"] = jnp.int32(W)
+        else:
+            self.state = self.engine.init_config(new_cfg, self.universe)
+        self.config = new_cfg

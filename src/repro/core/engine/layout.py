@@ -1,0 +1,84 @@
+"""Unified state layout for the capacity-masked policy core.
+
+Single source of the constants and sizing formulas that were previously
+declared independently in ``core/jax_engine.py``, ``tuning/sweep.py``
+and ``core/prodcache.py`` (``_WHERE_*``).  Deliberately numpy/JAX-free:
+the production numpy cache (``ProdClock2QPlus``) and the threaded shard
+service import these constants without pulling a JAX backend into their
+process.
+
+``SweepConfig`` (one grid point: a full policy parameterization) also
+lives here — it is pure data shared by every layer above, and keeping it
+below the step modules avoids an import cycle with the engine registry.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+# Sentinel for an empty slot in every key array (queue rings, location
+# tables, payload handles).  A plain int: usable in numpy and JAX alike.
+EMPTY = -1
+
+# Location-table "where" codes: which segment a key currently lives in.
+W_NONE, W_SMALL, W_MAIN, W_GHOST = 0, 1, 2, 3
+
+
+def seg(capacity: int, frac: float) -> int:
+    """Segment size for a fraction of ``capacity`` (at least one slot)."""
+    return max(1, int(round(capacity * frac)))
+
+
+def c2qp_sizes(capacity: int, small_frac: float = 0.1,
+               ghost_frac: float = 0.5,
+               window_frac: float = 0.5) -> Tuple[int, int, int, int]:
+    """(small, main, ghost, window) segment sizes for one Clock2Q+
+    configuration — the single source of the sizing formulas.  Every
+    engine (serial replay, batched sweep lane, Pallas kernel oracle)
+    derives its sizes here; their exact-parity guarantees depend on it."""
+    S = min(capacity, seg(capacity, small_frac))
+    M = max(1, capacity - S)
+    G = seg(capacity, ghost_frac)
+    W = int(round(window_frac * S))
+    return S, M, G, W
+
+
+def sq_sizes(capacity: int, small_frac: float = 0.1,
+             ghost_frac: float = 1.0) -> Tuple[int, int, int]:
+    """(small, main, ghost) sizes for the S3-FIFO family (no correlation
+    window; ghost defaults to a FULL capacity's worth of tombstones)."""
+    S = min(capacity, seg(capacity, small_frac))
+    M = max(1, capacity - S)
+    G = seg(capacity, ghost_frac)
+    return S, M, G
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepConfig:
+    """One grid point: a full policy parameterization.
+
+    ``skip_limit`` uses the sweep convention: 0 = unlimited (the paper
+    default); ``ProdClock2QPlus`` uses None for unlimited — the tuner
+    translates.  ``policy`` selects the registered lane engine; fields a
+    policy does not read (see ``PolicyEngine.knobs``) are ignored by it.
+    ``bits`` is only read by the s3fifo family (1- vs 2-bit counters).
+
+    Note the field DEFAULTS are the Clock2Q+ paper defaults; when
+    building configs for another policy go through
+    ``get_engine(name).config(capacity, ...)``, which applies that
+    engine's own preset (e.g. s3fifo's full-capacity ghost ring).
+    """
+    capacity: int
+    window_frac: float = 0.5
+    small_frac: float = 0.1
+    ghost_frac: float = 0.5
+    skip_limit: int = 0
+    policy: str = "clock2q+"
+    bits: int = 2
+
+    def sizes(self) -> Tuple[int, int, int, int]:
+        """Clock2Q+ (small, main, ghost, window) sizes — compat helper;
+        engines size themselves via their own ``sizes_fn``."""
+        return c2qp_sizes(self.capacity, self.small_frac, self.ghost_frac,
+                          self.window_frac)

@@ -1,0 +1,19 @@
+"""The masked-scatter primitive shared by every capacity-masked step.
+
+Batched grid lanes diverge, so the steps avoid ``lax.switch``/``cond``
+(which would SELECT whole state arrays — copying each lane's
+(universe,)-sized location tables several times per request) and are
+written as straight-line code over mutually-exclusive case masks, with
+``mset`` as the single write primitive.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mset(arr: jnp.ndarray, i, val, mask) -> jnp.ndarray:
+    """Masked single-slot scatter: ``arr[i] = val`` where ``mask``, else
+    unchanged (the False branch rewrites ``arr[i]`` to itself, so a
+    garbage/negative ``i`` under a False mask is harmless)."""
+    return arr.at[i].set(jnp.where(mask, val, arr[i]))

@@ -1,0 +1,142 @@
+"""Capacity-masked S3-FIFO step (faithful: FIFO-with-reinsertion main,
+saturating freq counters, ghost tombstone ring).
+
+Same masked-layout discipline as ``engine.clock2qplus``.  The main
+ring's evict-from-head-with-reinsertion walk is computed in closed form
+instead of a ``lax.while_loop`` (which would lock-step vmap lanes):
+
+With a full ring, a slot at cyclic distance ``d(i) = (i - mhead) mod
+mcap`` holding freq ``f(i)`` is visited at walk positions ``d, d +
+mcap, d + 2*mcap, ...``; each visit with freq >= 1 reinserts (rotating
+in place — the popleft+append of the deque reference reuses the slot)
+and decrements, so the slot first presents freq 0 at position ``d(i) +
+f(i)*mcap``.  The walk evicts at the FIRST position whose slot presents
+freq 0, i.e. ``p = min_i(d(i) + f(i)*mcap)`` — capped by ``skip_limit``
+reinsertions when one is set (0 = unlimited).  Every visit before ``p``
+was a reinsertion, so slot ``i`` loses ``ceil((p - d(i)) / mcap)``
+freq; the victim is ``(mhead + p) % mcap`` and the head advances past
+it.  Eviction then insertion at the tail lands the new key in the
+victim's slot, exactly like the loop it replaces.
+
+Hit/miss parity (1- and 2-bit) with the pure-Python zoo is asserted in
+tests/test_jax_engine.py and fuzzed in tests/test_engine_fuzz.py.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.engine.layout import (
+    EMPTY, W_GHOST, W_MAIN, W_NONE, W_SMALL, SweepConfig, sq_sizes,
+)
+from repro.core.engine.masked import mset as _mset
+
+_BIG = 2**30  # above any reachable walk position; far from int32 overflow
+
+
+def sizes(cfg: SweepConfig) -> Tuple[int, int, int]:
+    return sq_sizes(cfg.capacity, cfg.small_frac, cfg.ghost_frac)
+
+
+def init(cfg: SweepConfig, universe: int,
+         phys: Optional[Tuple[int, int, int]] = None) -> Dict:
+    S, M, G = sizes(cfg)
+    pS, pM, pG = phys if phys is not None else (S, M, G)
+    return dict(
+        skey=jnp.full((pS,), EMPTY), sfreq=jnp.zeros((pS,), jnp.int32),
+        spos=jnp.int32(0),
+        mkey=jnp.full((pM,), EMPTY), mfreq=jnp.zeros((pM,), jnp.int32),
+        mhead=jnp.int32(0), mcount=jnp.int32(0),
+        gkey=jnp.full((pG,), EMPTY), gpos=jnp.int32(0),
+        loc_w=jnp.zeros((universe,), jnp.int8),
+        loc_s=jnp.zeros((universe,), jnp.int32),
+        freq_cap=jnp.int32(1 if cfg.bits == 1 else 3),
+        promote_at=jnp.int32(1 if cfg.bits == 1 else 2),
+        scap=jnp.int32(S), mcap=jnp.int32(M), gcap=jnp.int32(G),
+        skip_limit=jnp.int32(cfg.skip_limit),
+    )
+
+
+def step(st: Dict, key) -> Tuple[Dict, jnp.ndarray]:
+    active = key >= 0  # key < 0: padding sentinel, whole step is a no-op
+    key = jnp.maximum(key, 0)
+    where = st["loc_w"][key]
+    slot = st["loc_s"][key]
+    is_small = active & (where == W_SMALL)
+    is_main = active & (where == W_MAIN)
+    is_ghost = active & (where == W_GHOST)
+    is_none = active & (where == W_NONE)
+    hit = is_small | is_main
+
+    # -- hits: saturating freq bumps ------------------------------------------
+    sfreq = _mset(st["sfreq"], slot,
+                  jnp.minimum(st["freq_cap"], st["sfreq"][slot] + 1), is_small)
+    mfreq = _mset(st["mfreq"], slot,
+                  jnp.minimum(st["freq_cap"], st["mfreq"][slot] + 1), is_main)
+
+    # -- ghost hit: leave the ghost ring, then insert into main ---------------
+    gkey = _mset(st["gkey"], slot, EMPTY, is_ghost)
+    loc_w = _mset(st["loc_w"], key, W_NONE, is_ghost)
+    loc_s = st["loc_s"]
+
+    # -- miss: displace the small-FIFO cursor slot ----------------------------
+    spos = st["spos"]
+    displaced = st["skey"][spos]
+    disp = is_none & (displaced >= 0)
+    disp_promote = disp & (sfreq[spos] >= st["promote_at"])
+    disp_demote = disp & ~(sfreq[spos] >= st["promote_at"])
+    loc_w = _mset(loc_w, displaced, W_NONE, disp)
+
+    # demote path: ghost-push the displaced key
+    g = st["gpos"]
+    gold = gkey[g]
+    loc_w = _mset(loc_w, gold, W_NONE, disp_demote & (gold >= 0))
+    gkey = _mset(gkey, g, displaced, disp_demote)
+    loc_w = _mset(loc_w, displaced, W_GHOST, disp_demote)
+    loc_s = _mset(loc_s, displaced, g, disp_demote)
+    gpos = jnp.where(disp_demote, (g + 1) % st["gcap"], g)
+
+    # -- main insert: closed-form FIFO-with-reinsertion (see module doc) ------
+    do_ins = is_ghost | disp_promote
+    ins_key = jnp.where(is_ghost, key, displaced)
+    M = st["mkey"].shape[-1]  # physical ring size — static
+    mcap, mhead, mcount = st["mcap"], st["mhead"], st["mcount"]
+    idx = jnp.arange(M)
+    valid = idx < mcap
+    full = mcount >= mcap
+    need_evict = do_ins & full
+    d = jnp.where(valid, (idx - mhead) % mcap, 0)
+    # first walk position at which slot i presents freq 0 (freq <= 3, so
+    # at most freq_cap full laps; scores stay far below int32 range)
+    big = jnp.int32(_BIG)
+    score = jnp.where(valid, d + mfreq * mcap, big)
+    p = jnp.min(score)
+    p = jnp.where(st["skip_limit"] > 0,
+                  jnp.minimum(p, st["skip_limit"]), p)
+    # every visit before position p was a reinsertion: decrement its slot
+    visits = jnp.where(valid, jnp.maximum(0, -((d - p) // mcap)), 0)
+    mfreq = jnp.where(need_evict, mfreq - visits, mfreq)
+    ms = jnp.where(full, (mhead + p) % mcap,
+                   (mhead + mcount) % mcap)  # tail slot when not full
+    victim = st["mkey"][ms]
+    loc_w = _mset(loc_w, victim, W_NONE, need_evict & (victim >= 0))
+    loc_w = _mset(loc_w, ins_key, W_MAIN, do_ins)
+    loc_s = _mset(loc_s, ins_key, ms, do_ins)
+    mkey = _mset(st["mkey"], ms, ins_key, do_ins)
+    mfreq = _mset(mfreq, ms, 0, do_ins)
+    mhead = jnp.where(need_evict, (mhead + p + 1) % mcap, mhead)
+    mcount = jnp.where(do_ins & ~full, mcount + 1, mcount)
+
+    # -- miss: the new key enters the small FIFO ------------------------------
+    skey = _mset(st["skey"], spos, key, is_none)
+    sfreq = _mset(sfreq, spos, 0, is_none)
+    loc_w = _mset(loc_w, key, W_SMALL, is_none)
+    loc_s = _mset(loc_s, key, spos, is_none)
+    spos = jnp.where(is_none, (spos + 1) % st["scap"], spos)
+
+    st = dict(st, skey=skey, sfreq=sfreq, spos=spos,
+              mkey=mkey, mfreq=mfreq, mhead=mhead, mcount=mcount,
+              gkey=gkey, gpos=gpos, loc_w=loc_w, loc_s=loc_s)
+    return st, hit

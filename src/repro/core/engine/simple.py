@@ -1,0 +1,126 @@
+"""Capacity-masked FIFO / Clock / LRU steps.
+
+Same layout discipline as the Clock2Q+ core: queue arrays at physical
+(padded) sizes, the logical capacity as a ``cap`` scalar in the state,
+cursors wrapped modulo ``cap``, straight-line masked scatters instead of
+``lax.cond`` branches (see ``engine.clock2qplus`` for why), and ``key <
+0`` as the no-op padding sentinel.  Clock's victim search is the same
+closed-form sweep as the Clock2Q+ main clock (skip_limit-free).
+
+Hit/miss parity with the pure-Python zoo is asserted in
+tests/test_jax_engine.py and fuzzed in tests/test_engine_fuzz.py.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.engine.layout import EMPTY, SweepConfig
+from repro.core.engine.masked import mset as _mset
+
+_I32_MAX = 2**31 - 1
+
+
+def sizes(cfg: SweepConfig) -> Tuple[int]:
+    return (max(1, cfg.capacity),)
+
+
+# -- FIFO ----------------------------------------------------------------------
+
+def fifo_init(cfg: SweepConfig, universe: int,
+              phys: Optional[Tuple[int]] = None) -> Dict:
+    (C,) = sizes(cfg)
+    (pC,) = phys if phys is not None else (C,)
+    return dict(keys=jnp.full((pC,), EMPTY), pos=jnp.int32(0),
+                resident=jnp.zeros((universe,), jnp.bool_),
+                cap=jnp.int32(C))
+
+
+def fifo_step(st: Dict, key) -> Tuple[Dict, jnp.ndarray]:
+    active = key >= 0
+    key = jnp.maximum(key, 0)
+    hit = active & st["resident"][key]
+    miss = active & ~hit
+    s = st["pos"]
+    old = st["keys"][s]
+    resident = _mset(st["resident"], old, False, miss & (old >= 0))
+    resident = _mset(resident, key, True, miss)
+    keys = _mset(st["keys"], s, key, miss)
+    pos = jnp.where(miss, (s + 1) % st["cap"], s)
+    return dict(st, keys=keys, pos=pos, resident=resident), hit
+
+
+# -- Clock (second chance) -----------------------------------------------------
+
+def clock_init(cfg: SweepConfig, universe: int,
+               phys: Optional[Tuple[int]] = None) -> Dict:
+    (C,) = sizes(cfg)
+    (pC,) = phys if phys is not None else (C,)
+    return dict(keys=jnp.full((pC,), EMPTY),
+                ref=jnp.zeros((pC,), jnp.bool_), hand=jnp.int32(0),
+                loc=jnp.full((universe,), EMPTY), cap=jnp.int32(C))
+
+
+def clock_step(st: Dict, key) -> Tuple[Dict, jnp.ndarray]:
+    active = key >= 0
+    key = jnp.maximum(key, 0)
+    slot = st["loc"][key]
+    hit = active & (slot >= 0)
+    miss = active & ~hit
+    ref = _mset(st["ref"], slot, True, hit)
+
+    # closed-form sweep: first slot (cyclic from hand) not occupied&ref'd;
+    # a full fruitless lap clears every ref and takes the hand slot
+    C = st["keys"].shape[-1]  # physical ring size — static
+    cap, hand = st["cap"], st["hand"]
+    idx = jnp.arange(C)
+    valid = idx < cap
+    d = jnp.where(valid, (idx - hand) % cap, C + 1)
+    skippable = (st["keys"] >= 0) & ref
+    vd = jnp.min(jnp.where(valid & ~skippable, d, C + 1))
+    vd = jnp.minimum(vd, cap)
+    ms = (hand + vd) % cap
+    ref = jnp.where(miss, ref & ~(valid & (d < vd)), ref)
+    victim = st["keys"][ms]
+    loc = _mset(st["loc"], victim, EMPTY, miss & (victim >= 0))
+    loc = _mset(loc, key, ms, miss)
+    keys = _mset(st["keys"], ms, key, miss)
+    ref = _mset(ref, ms, False, miss)
+    hand = jnp.where(miss, (ms + 1) % cap, hand)
+    return dict(st, keys=keys, ref=ref, hand=hand, loc=loc), hit
+
+
+# -- LRU -----------------------------------------------------------------------
+
+def lru_init(cfg: SweepConfig, universe: int,
+             phys: Optional[Tuple[int]] = None) -> Dict:
+    (C,) = sizes(cfg)
+    (pC,) = phys if phys is not None else (C,)
+    return dict(keys=jnp.full((pC,), EMPTY),
+                last=jnp.full((pC,), jnp.int32(-1)),
+                t=jnp.int32(0), loc=jnp.full((universe,), EMPTY),
+                cap=jnp.int32(C))
+
+
+def lru_step(st: Dict, key) -> Tuple[Dict, jnp.ndarray]:
+    active = key >= 0
+    key = jnp.maximum(key, 0)
+    slot = st["loc"][key]
+    hit = active & (slot >= 0)
+    miss = active & ~hit
+    C = st["keys"].shape[-1]
+    # empty logical slots have last=-1 -> picked first; padded slots are
+    # masked to +inf so the argmin can never land on them (ties keep
+    # argmin's first-index rule, matching the unmasked engine)
+    valid = jnp.arange(C) < st["cap"]
+    s = jnp.argmin(jnp.where(valid, st["last"], _I32_MAX))
+    victim = st["keys"][s]
+    loc = _mset(st["loc"], victim, EMPTY, miss & (victim >= 0))
+    keys = _mset(st["keys"], s, key, miss)
+    tslot = jnp.where(hit, slot, s)
+    last = _mset(st["last"], tslot, st["t"], active)
+    t = st["t"] + active.astype(jnp.int32)
+    loc = _mset(loc, key, tslot, miss)
+    return dict(st, keys=keys, last=last, t=t, loc=loc), hit

@@ -7,6 +7,13 @@ plus a pure ``step(state, key) -> (state, hit)``.  Traces are replayed with
 sizes × policies) run as ``jax.vmap`` lanes.  This replaces the paper's
 multi-thread scalability story with lane parallelism (DESIGN.md §3).
 
+The state machines themselves live in ``repro.core.engine`` — ONE
+capacity-masked step per policy family behind the ``PolicyEngine``
+registry, shared verbatim with the batched MRC sweep
+(``repro.tuning.sweep``); a single fixed-size simulation here is the
+degenerate mask.  This module is the serial/chunked/sharded replay
+driver layer on top, plus compat re-exports of the layout constants.
+
 Keys must be int32 ids in ``[0, universe)``.  Lookup uses a dense location
 table (``where[key]``, ``slot[key]``) — the TPU-friendly replacement for
 the production chained hash (gather beats pointer chasing).
@@ -15,416 +22,29 @@ Policies: fifo, clock, lru, s3fifo (1/2-bit), clock2q, clock2q+ (clock2q
 is clock2q+ with the 2Q sizing and a full-size correlation window, §3.2).
 
 Exact hit/miss parity with the pure-Python reference zoo is asserted in
-tests/test_jax_engine.py.
+tests/test_jax_engine.py and fuzzed in tests/test_engine_fuzz.py.
 """
 
 from __future__ import annotations
 
-import functools
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-EMPTY = jnp.int32(-1)
-W_NONE, W_SMALL, W_MAIN, W_GHOST = 0, 1, 2, 3
-
-
-def _seg(capacity: int, frac: float) -> int:
-    return max(1, int(round(capacity * frac)))
-
-
-def c2qp_sizes(capacity: int, small_frac: float = 0.1,
-               ghost_frac: float = 0.5,
-               window_frac: float = 0.5) -> Tuple[int, int, int, int]:
-    """(small, main, ghost, window) segment sizes for one configuration —
-    the single source of the sizing formulas, shared by ``c2qp_init`` and
-    the batched grid engine (repro.tuning.sweep), whose exact-parity
-    guarantee depends on both deriving identical sizes."""
-    S = min(capacity, _seg(capacity, small_frac))
-    M = max(1, capacity - S)
-    G = _seg(capacity, ghost_frac)
-    W = int(round(window_frac * S))
-    return S, M, G, W
-
-
-# =============================================================================
-# Clock2Q+ family (covers clock2q via sizing, s3fifo-1bit via window=0 with
-# a clock main; the faithful s3fifo uses the FIFO-reinsert main below)
-# =============================================================================
-
-def c2qp_init(capacity: int, universe: int, *, small_frac: float = 0.1,
-              ghost_frac: float = 0.5, window_frac: float = 0.5,
-              skip_limit: int = 0) -> Dict[str, jnp.ndarray]:
-    """skip_limit=0 means unlimited (paper default)."""
-    S, M, G, W = c2qp_sizes(capacity, small_frac, ghost_frac, window_frac)
-    return dict(
-        skey=jnp.full((S,), EMPTY), sref=jnp.zeros((S,), jnp.bool_),
-        sseq=jnp.zeros((S,), jnp.int32), spos=jnp.int32(0),
-        seqctr=jnp.int32(0),
-        mkey=jnp.full((M,), EMPTY), mref=jnp.zeros((M,), jnp.bool_),
-        hand=jnp.int32(0),
-        gkey=jnp.full((G,), EMPTY), gpos=jnp.int32(0),
-        loc_w=jnp.zeros((universe,), jnp.int8),
-        loc_s=jnp.zeros((universe,), jnp.int32),
-        window=jnp.int32(W), skip_limit=jnp.int32(skip_limit),
-    )
-
-
-def _c2qp_insert_main(st: Dict, key: jnp.ndarray) -> Dict:
-    """Clock sweep for a victim slot, then place ``key`` there."""
-    M = st["mkey"].shape[0]
-
-    def cond(c):
-        return ~c["done"]
-
-    def body(c):
-        s = c["hand"]
-        occupied = st["mkey"][s] >= 0  # keys don't change during the sweep
-        ref = c["mref"][s]
-        skippable = occupied & ref & ~c["forced"]
-        # clear ref & advance, or take the slot
-        new_skips = c["skips"] + skippable.astype(jnp.int32)
-        forced = jnp.where(
-            st["skip_limit"] > 0,
-            c["forced"] | (new_skips >= st["skip_limit"]), c["forced"])
-        take = ~skippable
-        mref = c["mref"].at[s].set(jnp.where(skippable, False, c["mref"][s]))
-        return dict(
-            hand=jnp.where(take, s, (s + 1) % M),
-            mref=mref, skips=new_skips, forced=forced,
-            done=take, slot=jnp.where(take, s, c["slot"]))
-
-    out = jax.lax.while_loop(cond, body, dict(
-        hand=st["hand"], mref=st["mref"], skips=jnp.int32(0),
-        forced=jnp.bool_(False), done=jnp.bool_(False), slot=jnp.int32(0)))
-    s = out["slot"]
-    victim = st["mkey"][s]
-    has_victim = victim >= 0
-    loc_w = jnp.where(
-        has_victim, st["loc_w"].at[victim].set(W_NONE), st["loc_w"])
-    loc_w = loc_w.at[key].set(W_MAIN)
-    loc_s = st["loc_s"].at[key].set(s)
-    return dict(st, mkey=st["mkey"].at[s].set(key),
-                mref=out["mref"].at[s].set(False),
-                hand=(s + 1) % M, loc_w=loc_w, loc_s=loc_s)
-
-
-def _c2qp_ghost_push(st: Dict, key: jnp.ndarray) -> Dict:
-    G = st["gkey"].shape[0]
-    g = st["gpos"]
-    old = st["gkey"][g]
-    loc_w = jnp.where(old >= 0, st["loc_w"].at[old].set(W_NONE), st["loc_w"])
-    loc_w = loc_w.at[key].set(W_GHOST)
-    loc_s = st["loc_s"].at[key].set(g)
-    return dict(st, gkey=st["gkey"].at[g].set(key), gpos=(g + 1) % G,
-                loc_w=loc_w, loc_s=loc_s)
-
-
-def c2qp_step(st: Dict, key: jnp.ndarray) -> Tuple[Dict, jnp.ndarray]:
-    where = st["loc_w"][key]
-    slot = st["loc_s"][key]
-    hit = (where == W_SMALL) | (where == W_MAIN)
-
-    def case_small(st):
-        age = st["seqctr"] - st["sseq"][slot]
-        setref = age >= st["window"]
-        return dict(st, sref=st["sref"].at[slot].set(st["sref"][slot] | setref))
-
-    def case_main(st):
-        return dict(st, mref=st["mref"].at[slot].set(True))
-
-    def case_ghost(st):
-        st = dict(st, gkey=st["gkey"].at[slot].set(EMPTY),
-                  loc_w=st["loc_w"].at[key].set(W_NONE))
-        return _c2qp_insert_main(st, key)
-
-    def case_none(st):
-        S = st["skey"].shape[0]
-        s = st["spos"]
-        displaced = st["skey"][s]
-        dref = st["sref"][s]
-
-        def promote(st):
-            return _c2qp_insert_main(
-                dict(st, loc_w=st["loc_w"].at[displaced].set(W_NONE)), displaced)
-
-        def demote(st):
-            return _c2qp_ghost_push(
-                dict(st, loc_w=st["loc_w"].at[displaced].set(W_NONE)), displaced)
-
-        st = jax.lax.cond(
-            displaced >= 0,
-            lambda st: jax.lax.cond(dref, promote, demote, st),
-            lambda st: st, st)
-        return dict(
-            st,
-            skey=st["skey"].at[s].set(key),
-            sref=st["sref"].at[s].set(False),
-            sseq=st["sseq"].at[s].set(st["seqctr"]),
-            spos=(s + 1) % S,
-            seqctr=st["seqctr"] + 1,
-            loc_w=st["loc_w"].at[key].set(W_SMALL),
-            loc_s=st["loc_s"].at[key].set(s))
-
-    st = jax.lax.switch(where.astype(jnp.int32),
-                        [case_none, case_small, case_main, case_ghost], st)
-    return st, hit
-
-
-# =============================================================================
-# FIFO / Clock / LRU
-# =============================================================================
-
-def fifo_init(capacity: int, universe: int) -> Dict:
-    return dict(keys=jnp.full((capacity,), EMPTY), pos=jnp.int32(0),
-                resident=jnp.zeros((universe,), jnp.bool_))
-
-
-def fifo_step(st: Dict, key) -> Tuple[Dict, jnp.ndarray]:
-    hit = st["resident"][key]
-
-    def miss(st):
-        C = st["keys"].shape[0]
-        s = st["pos"]
-        old = st["keys"][s]
-        res = jnp.where(old >= 0, st["resident"].at[old].set(False),
-                        st["resident"])
-        return dict(keys=st["keys"].at[s].set(key), pos=(s + 1) % C,
-                    resident=res.at[key].set(True))
-
-    return jax.lax.cond(hit, lambda st: st, miss, st), hit
-
-
-def clock_init(capacity: int, universe: int) -> Dict:
-    return dict(keys=jnp.full((capacity,), EMPTY),
-                ref=jnp.zeros((capacity,), jnp.bool_), hand=jnp.int32(0),
-                loc=jnp.full((universe,), EMPTY),)
-
-
-def clock_step(st: Dict, key) -> Tuple[Dict, jnp.ndarray]:
-    slot = st["loc"][key]
-    hit = slot >= 0
-
-    def on_hit(st):
-        return dict(st, ref=st["ref"].at[slot].set(True))
-
-    def on_miss(st):
-        C = st["keys"].shape[0]
-
-        def body(c):
-            s = c["hand"]
-            skip = (c["keys"][s] >= 0) & c["ref"][s]
-            return dict(hand=jnp.where(skip, (s + 1) % C, s),
-                        ref=c["ref"].at[s].set(False),
-                        keys=c["keys"], done=~skip,
-                        slot=jnp.where(skip, c["slot"], s))
-
-        out = jax.lax.while_loop(
-            lambda c: ~c["done"], body,
-            dict(hand=st["hand"], ref=st["ref"], keys=st["keys"],
-                 done=jnp.bool_(False), slot=jnp.int32(0)))
-        s = out["slot"]
-        victim = st["keys"][s]
-        loc = jnp.where(victim >= 0, st["loc"].at[victim].set(EMPTY), st["loc"])
-        C = st["keys"].shape[0]
-        return dict(keys=st["keys"].at[s].set(key),
-                    ref=out["ref"].at[s].set(False),
-                    hand=(s + 1) % C, loc=loc.at[key].set(s))
-
-    return jax.lax.cond(hit, on_hit, on_miss, st), hit
-
-
-def lru_init(capacity: int, universe: int) -> Dict:
-    return dict(keys=jnp.full((capacity,), EMPTY),
-                last=jnp.full((capacity,), jnp.int32(-1)),
-                t=jnp.int32(0), loc=jnp.full((universe,), EMPTY))
-
-
-def lru_step(st: Dict, key) -> Tuple[Dict, jnp.ndarray]:
-    slot = st["loc"][key]
-    hit = slot >= 0
-
-    def on_hit(st):
-        return dict(st, last=st["last"].at[slot].set(st["t"]), t=st["t"] + 1)
-
-    def on_miss(st):
-        s = jnp.argmin(st["last"])  # empty slots have last=-1 -> picked first
-        victim = st["keys"][s]
-        loc = jnp.where(victim >= 0, st["loc"].at[victim].set(EMPTY), st["loc"])
-        return dict(keys=st["keys"].at[s].set(key),
-                    last=st["last"].at[s].set(st["t"]), t=st["t"] + 1,
-                    loc=loc.at[key].set(s))
-
-    return jax.lax.cond(hit, on_hit, on_miss, st), hit
-
-
-# =============================================================================
-# S3-FIFO (faithful: FIFO-with-reinsertion main, freq counters, ghost ring)
-# =============================================================================
-
-def s3fifo_init(capacity: int, universe: int, *, small_frac: float = 0.1,
-                ghost_frac: float = 1.0, bits: int = 2,
-                skip_limit: int = 0) -> Dict:
-    S = min(capacity, _seg(capacity, small_frac))
-    M = max(1, capacity - S)
-    G = _seg(capacity, ghost_frac)
-    return dict(
-        skey=jnp.full((S,), EMPTY), sfreq=jnp.zeros((S,), jnp.int32),
-        spos=jnp.int32(0),
-        mkey=jnp.full((M,), EMPTY), mfreq=jnp.zeros((M,), jnp.int32),
-        mhead=jnp.int32(0), mcount=jnp.int32(0),
-        gkey=jnp.full((G,), EMPTY), gpos=jnp.int32(0),
-        loc_w=jnp.zeros((universe,), jnp.int8),
-        loc_s=jnp.zeros((universe,), jnp.int32),
-        freq_cap=jnp.int32(1 if bits == 1 else 3),
-        promote_at=jnp.int32(1 if bits == 1 else 2),
-        skip_limit=jnp.int32(skip_limit),
-    )
-
-
-def _s3_insert_main(st: Dict, key: jnp.ndarray) -> Dict:
-    """Main ring: evict-from-head-with-reinsertion if full, insert at tail."""
-    M = st["mkey"].shape[0]
-
-    def evict(st):
-        # With a full ring, evict-head + append-tail reuses the head slot as
-        # the new tail slot: reinserted entries "rotate in place" (the head
-        # cursor advances past them) with their freq decremented — exactly
-        # the deque popleft+append of the reference implementation.
-        def cond(c):
-            return ~c["done"]
-
-        def body(c):
-            h = c["mhead"]
-            k = c["mkey"][h]
-            freq = c["mfreq"][h]
-            reinsert = (freq >= 1) & ((st["skip_limit"] == 0)
-                                      | (c["skips"] < st["skip_limit"]))
-            mfreq = jnp.where(reinsert, c["mfreq"].at[h].set(freq - 1),
-                              c["mfreq"])
-            done = ~reinsert
-            mkey = jnp.where(done, c["mkey"].at[h].set(EMPTY), c["mkey"])
-            loc_w = jnp.where(done & (k >= 0), c["loc_w"].at[k].set(W_NONE),
-                              c["loc_w"])
-            return dict(mhead=(h + 1) % M, mkey=mkey, mfreq=mfreq,
-                        skips=c["skips"] + reinsert.astype(jnp.int32),
-                        done=done, slot=jnp.where(done, h, c["slot"]),
-                        loc_w=loc_w)
-
-        out = jax.lax.while_loop(cond, body, dict(
-            mhead=st["mhead"], mkey=st["mkey"], mfreq=st["mfreq"],
-            skips=jnp.int32(0), done=jnp.bool_(False), slot=jnp.int32(0),
-            loc_w=st["loc_w"]))
-        return dict(st, mhead=out["mhead"], mkey=out["mkey"],
-                    mfreq=out["mfreq"], loc_w=out["loc_w"],
-                    mcount=st["mcount"] - 1, _slot=out["slot"])
-
-    def no_evict(st):
-        # free slot at tail
-        return dict(st, _slot=(st["mhead"] + st["mcount"]) % M)
-
-    st = dict(st, _slot=jnp.int32(0))
-    st = jax.lax.cond(st["mcount"] >= M, evict, no_evict, st)
-    s = st.pop("_slot")
-    return dict(st, mkey=st["mkey"].at[s].set(key),
-                mfreq=st["mfreq"].at[s].set(0), mcount=st["mcount"] + 1,
-                loc_w=st["loc_w"].at[key].set(W_MAIN),
-                loc_s=st["loc_s"].at[key].set(s))
-
-
-def _s3_ghost_push(st: Dict, key: jnp.ndarray) -> Dict:
-    G = st["gkey"].shape[0]
-    g = st["gpos"]
-    old = st["gkey"][g]
-    loc_w = jnp.where(old >= 0, st["loc_w"].at[old].set(W_NONE), st["loc_w"])
-    return dict(st, gkey=st["gkey"].at[g].set(key), gpos=(g + 1) % G,
-                loc_w=loc_w.at[key].set(W_GHOST),
-                loc_s=st["loc_s"].at[key].set(g))
-
-
-def s3fifo_step(st: Dict, key) -> Tuple[Dict, jnp.ndarray]:
-    where = st["loc_w"][key]
-    slot = st["loc_s"][key]
-    hit = (where == W_SMALL) | (where == W_MAIN)
-
-    def case_small(st):
-        f = jnp.minimum(st["freq_cap"], st["sfreq"][slot] + 1)
-        return dict(st, sfreq=st["sfreq"].at[slot].set(f))
-
-    def case_main(st):
-        f = jnp.minimum(st["freq_cap"], st["mfreq"][slot] + 1)
-        return dict(st, mfreq=st["mfreq"].at[slot].set(f))
-
-    def case_ghost(st):
-        st = dict(st, gkey=st["gkey"].at[slot].set(EMPTY),
-                  loc_w=st["loc_w"].at[key].set(W_NONE))
-        return _s3_insert_main(st, key)
-
-    def case_none(st):
-        S = st["skey"].shape[0]
-        s = st["spos"]
-        displaced = st["skey"][s]
-        dfreq = st["sfreq"][s]
-
-        def promote(st):
-            return _s3_insert_main(
-                dict(st, loc_w=st["loc_w"].at[displaced].set(W_NONE)), displaced)
-
-        def demote(st):
-            return _s3_ghost_push(
-                dict(st, loc_w=st["loc_w"].at[displaced].set(W_NONE)), displaced)
-
-        st = jax.lax.cond(
-            displaced >= 0,
-            lambda st: jax.lax.cond(dfreq >= st["promote_at"], promote,
-                                    demote, st),
-            lambda st: st, st)
-        return dict(
-            st,
-            skey=st["skey"].at[s].set(key),
-            sfreq=st["sfreq"].at[s].set(0),
-            spos=(s + 1) % S,
-            loc_w=st["loc_w"].at[key].set(W_SMALL),
-            loc_s=st["loc_s"].at[key].set(s))
-
-    st = jax.lax.switch(where.astype(jnp.int32),
-                        [case_none, case_small, case_main, case_ghost], st)
-    return st, hit
-
-
-# =============================================================================
-# replay drivers
-# =============================================================================
-
-_POLICIES = {
-    "fifo": (fifo_init, fifo_step),
-    "clock": (clock_init, clock_step),
-    "lru": (lru_init, lru_step),
-    "s3fifo": (s3fifo_init, s3fifo_step),
-    "clock2q+": (c2qp_init, c2qp_step),
-    # Clock2Q == Clock2Q+ with 2Q sizing and the window covering the whole
-    # Small FIFO (the ref bit is never set while resident there, §3.2).
-    "clock2q": (functools.partial(c2qp_init, small_frac=0.25,
-                                  window_frac=10.0), c2qp_step),
-}
+from repro.core.engine import (  # noqa: F401  (compat re-exports)
+    EMPTY, W_GHOST, W_MAIN, W_NONE, W_SMALL, c2qp_sizes, engine_names,
+    get_engine, replay, replay_chunked,
+)
 
 
 def jax_policy_names():
-    return sorted(_POLICIES)
+    return engine_names()
 
 
 def init_state(policy: str, capacity: int, universe: int, **kw) -> Dict:
-    init, _ = _POLICIES[policy]
-    return init(capacity, universe, **kw)
-
-
-@functools.partial(jax.jit, static_argnames=("policy",))
-def replay(policy: str, state: Dict, trace: jnp.ndarray):
-    """Replay one trace; returns (final_state, hits[bool per request])."""
-    _, step = _POLICIES[policy]
-    return jax.lax.scan(step, state, trace)
+    return get_engine(policy).init(capacity, int(universe), **kw)
 
 
 def replay_np(policy: str, trace: np.ndarray, capacity: int,
@@ -437,72 +57,6 @@ def replay_np(policy: str, trace: np.ndarray, capacity: int,
     _, hits = replay(policy, st, jnp.asarray(trace, jnp.int32))
     h = int(np.sum(np.asarray(hits)))
     return h, 1.0 - h / max(1, len(trace))
-
-
-# =============================================================================
-# chunked state-carry replay (streaming traces through TraceStore chunks)
-# =============================================================================
-
-@functools.lru_cache(maxsize=1)
-def _replay_carry():
-    """Resolved lazily so importing this module never initializes a JAX
-    backend (device probing can hang minutes in hermetic environments).
-    Donating the carried state lets XLA reuse its buffers across chunk
-    calls (the state never needs two live copies); the CPU backend
-    ignores donation with a warning, so only request it where it's
-    implemented."""
-    if jax.default_backend() == "cpu":
-        return replay
-    return jax.jit(
-        lambda policy, state, trace: jax.lax.scan(
-            _POLICIES[policy][1], state, trace),
-        static_argnums=(0,), donate_argnums=(1,))
-
-
-def replay_chunked(policy: str, chunks, capacity: int, universe: int,
-                   state: Dict | None = None, **kw):
-    """Replay an iterable of key chunks, threading the scan state across
-    chunk boundaries.  ``lax.scan`` is sequential, so splitting a trace
-    at ANY boundary and carrying the state is bit-identical to the
-    single-shot ``replay`` of the concatenated trace (asserted in
-    tests/test_chunked.py) — but peak memory holds one chunk, not the
-    trace.  Chunks of equal length share one compiled executable; only a
-    ragged tail chunk triggers a second compile.
-
-    Returns ``(hits, n_requests, final_state)`` — pass ``state`` back in
-    to continue a stream across calls.
-    """
-    universe = int(universe)
-    if not (0 < universe <= np.iinfo(np.int32).max):
-        # Keys are int32 ids with dense (universe,)-sized location tables:
-        # raw production obj_ids (sparse/hashed 64-bit) must be relabelled
-        # first — tuning.sweep.relabel in memory, or once on disk with
-        # `python -m repro.traceio.convert --relabel`.
-        raise ValueError(
-            f"universe {universe} does not fit the engine's dense int32 id "
-            "space; relabel the trace to [0, n_unique) first "
-            "(repro.tuning.sweep.relabel or convert --relabel)")
-    st = init_state(policy, capacity, universe, **kw) \
-        if state is None else state
-    carry = _replay_carry()
-    hits = 0
-    n = 0
-    for chunk in chunks:
-        arr = np.ascontiguousarray(chunk)
-        # negative keys appear when hashed obj_ids >= 2**63 wrap through
-        # the oracleGeneral uint64->int64 load — reject those too, or they
-        # would wrap-index the dense tables instead of erroring
-        if arr.size and (int(arr.max()) >= universe or int(arr.min()) < 0):
-            bad = int(arr.max()) if int(arr.max()) >= universe \
-                else int(arr.min())
-            raise ValueError(
-                f"chunk contains key {bad} outside [0, {universe}); "
-                "relabel the trace (convert --relabel) or pass a larger "
-                "universe")
-        st, h = carry(policy, st, jnp.asarray(arr, jnp.int32))
-        hits += int(np.asarray(jnp.sum(h)))
-        n += int(arr.shape[0])
-    return hits, n, st
 
 
 def replay_store(policy: str, store, capacity: int,
@@ -529,7 +83,7 @@ def replay_store(policy: str, store, capacity: int,
 
 def replay_batch(policy: str, states: Dict, traces: jnp.ndarray):
     """vmap over leading lane axis of both states and traces."""
-    _, step = _POLICIES[policy]
+    step = get_engine(policy).step_fn
 
     def one(state, tr):
         return jax.lax.scan(step, state, tr)

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 from collections import OrderedDict, deque
 
-from repro.core.policy import CachePolicy, register, seg_size
+from repro.core.policy import CachePolicy, register
 
 
 @register("lirs")

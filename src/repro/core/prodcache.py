@@ -33,8 +33,10 @@ import dataclasses
 
 import numpy as np
 
-EMPTY = -1
-_WHERE_NONE, _WHERE_SMALL, _WHERE_MAIN = 0, 1, 2
+# shared sentinel (repro.core.engine.layout is pure Python — importing it
+# keeps this module JAX-free); re-exported here for the many callers that
+# do `from repro.core.prodcache import EMPTY`
+from repro.core.engine.layout import EMPTY  # noqa: F401
 
 
 def _next_pow2(n: int) -> int:
@@ -72,6 +74,10 @@ class AccessResult:
 
 class ProdClock2QPlus:
     """Array-based Clock2Q+ with pinning, dirty blocks, and live resizing."""
+
+    # the registered lane engine that simulates this policy bit-for-bit
+    # (consumed by the OnlineTuner and the MRC profiler)
+    engine_policy = "clock2q+"
 
     def __init__(self, capacity: int, *, small_frac: float = 0.1,
                  ghost_frac: float = 0.5, window_frac: float = 0.5,

@@ -16,7 +16,7 @@ re-assigned disjoint slices).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Tuple
+from typing import Dict, Iterator
 
 import numpy as np
 

@@ -25,7 +25,6 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 
 def _onehot_put(arr, rows_mask, col_idx, values):

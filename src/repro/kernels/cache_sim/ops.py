@@ -13,14 +13,13 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.engine.layout import c2qp_sizes
 from repro.kernels.cache_sim.cache_sim import cache_sim_raw
 
 
 def init_state(n_lanes: int, capacity: int, *, small_frac: float = 0.1,
                ghost_frac: float = 0.5):
-    S = max(1, int(round(capacity * small_frac)))
-    M = max(1, capacity - S)
-    G = max(1, int(round(capacity * ghost_frac)))
+    S, M, G, _ = c2qp_sizes(capacity, small_frac, ghost_frac)
     z = lambda c: jnp.zeros((n_lanes, c), jnp.int32)
     e = lambda c: jnp.full((n_lanes, c), -1, jnp.int32)
     return dict(skey=e(S), sref=z(S), sseq=z(S), mkey=e(M), mref=z(M),
@@ -44,8 +43,8 @@ def simulate_lanes(traces, capacity: int, *, window_frac: float = 0.5,
     """traces: (LANES, T) int32 -> (miss_ratios (LANES,), hits (LANES, T))."""
     traces = jnp.asarray(traces, jnp.int32)
     L = traces.shape[0]
-    S = max(1, int(round(capacity * small_frac)))
-    window = int(round(window_frac * S))
+    _, _, _, window = c2qp_sizes(capacity, small_frac, ghost_frac,
+                                 window_frac)
     state = init_state(L, capacity, small_frac=small_frac,
                        ghost_frac=ghost_frac)
     hits, _ = replay(traces, state, window=window, interpret=interpret)

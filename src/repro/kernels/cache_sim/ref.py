@@ -1,14 +1,13 @@
-"""Oracle for the cache_sim kernel: the location-table JAX engine
-(repro.core.jax_engine), itself bit-verified against the pure-Python
+"""Oracle for the cache_sim kernel: the capacity-masked policy core
+(repro.core.engine), itself bit-verified against the pure-Python
 reference zoo."""
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import jax_engine as je
+from repro.core.engine import get_engine
 
 
 def cache_sim_ref(traces: np.ndarray, capacity: int, *,
@@ -17,11 +16,11 @@ def cache_sim_ref(traces: np.ndarray, capacity: int, *,
     """traces: (LANES, T) -> hits (LANES, T) bool."""
     traces = np.asarray(traces)
     universe = int(traces.max()) + 1
+    eng = get_engine("clock2q+")
     out = []
     for lane in traces:
-        st = je.init_state("clock2q+", capacity, universe,
-                           small_frac=small_frac, ghost_frac=ghost_frac,
-                           window_frac=window_frac)
-        _, hits = je.replay("clock2q+", st, jnp.asarray(lane, jnp.int32))
+        st = eng.init(capacity, universe, small_frac=small_frac,
+                      ghost_frac=ghost_frac, window_frac=window_frac)
+        _, hits = eng.replay(st, jnp.asarray(lane, jnp.int32))
         out.append(np.asarray(hits))
     return np.stack(out)

@@ -12,9 +12,8 @@ Block keys:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Sequence, Tuple
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.kvcache.pool import BlockPool

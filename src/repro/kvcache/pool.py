@@ -16,7 +16,7 @@ admission touches all prefix blocks of a sequence back-to-back.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -166,6 +166,37 @@ class BlockPool:
         for k in dirty:
             self.flush(k)
         return len(dirty)
+
+    # -- what-if analysis --------------------------------------------------------
+    def estimate_mrc(self, capacities=None, *, rate_shift: int = 4,
+                     window_fracs=None) -> Dict[int, float]:
+        """Sampled MRC estimate of the recent block-key stream at
+        alternative HBM budgets — what-if input for ``resize()``.
+        Requires ``autotune=`` (the tuner's ring buffer is the key
+        history); simulated by the registered lane engine for the live
+        policy (``policy.engine_policy``), so the estimates describe the
+        exact replacement machine this pool runs.  Returns
+        {capacity: est. miss ratio} (NaN when the sample is empty)."""
+        from repro.tuning import profiler
+
+        if self.tuner is None:
+            raise RuntimeError(
+                "estimate_mrc needs autotune= — the OnlineTuner's access "
+                "ring buffer is the key history it profiles")
+        caps = [int(c) for c in
+                (capacities or (max(1, self.n_blocks // 2), self.n_blocks,
+                                2 * self.n_blocks))]
+        live = self.tuner._live_config()
+        wfs = tuple(window_fracs) if window_fracs else (live.window_frac,)
+        configs = [dataclasses.replace(live, capacity=c, window_frac=wf)
+                   for c in caps for wf in wfs]
+        trace = self.tuner.recent()
+        if trace.size == 0:
+            return {c: float("nan") for c in caps}
+        est = profiler.estimate_sweep(trace, configs, rate_shift)
+        # best window per capacity: the pool would retune after a resize
+        per_cap = est.reshape(len(caps), len(wfs))
+        return {c: float(np.nanmin(per_cap[i])) for i, c in enumerate(caps)}
 
     # -- elastic resize (paper §4.2 -> HBM budget changes) -----------------------
     def resize(self, new_n_blocks: int, steps_per_call: int = 64) -> None:

@@ -16,7 +16,6 @@ Usage:
 """
 
 import argparse
-import dataclasses
 import json
 import time
 import traceback
@@ -31,7 +30,7 @@ from repro.configs import ARCH_IDS, get_config
 from repro.launch import hlo_analysis, hlo_cost, specs as specs_lib
 from repro.launch.mesh import make_production_mesh
 from repro.models import opt_flags, transformer as T_lib
-from repro.models.config import SHAPES, ModelConfig, cell_applicable
+from repro.models.config import SHAPES, cell_applicable
 from repro.models.model import build
 from repro.sharding import rules
 from repro.training import optim, step as step_lib

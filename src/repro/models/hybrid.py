@@ -9,7 +9,7 @@ block invocation (G = n_layers // shared_attn_every caches).
 
 from __future__ import annotations
 
-from typing import Dict, NamedTuple, Optional, Tuple
+from typing import Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp

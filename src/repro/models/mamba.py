@@ -13,7 +13,7 @@ conv is applied to the x branch only; n_groups = 1.
 
 from __future__ import annotations
 
-from typing import Dict, NamedTuple, Tuple
+from typing import Dict, NamedTuple
 
 import jax
 import jax.numpy as jnp

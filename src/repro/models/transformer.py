@@ -12,7 +12,6 @@ without replicating GQA heads (DESIGN.md §6).
 
 from __future__ import annotations
 
-import functools
 from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax

@@ -14,7 +14,7 @@ they become evictable, exactly as §4.1.3 prescribes.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +23,6 @@ import numpy as np
 from repro.kvcache.manager import PagedKVManager
 from repro.kvcache.pool import BlockPool
 from repro.models import transformer as T
-from repro.models.config import ModelConfig
 from repro.models.model import ModelAPI
 
 
@@ -158,6 +157,11 @@ class ServingEngine:
                 self.mgr.seqs[rid].out_tokens.append(int(nxt[i]))
             self.mgr.maintenance()
         return done
+
+    def cache_mrc(self, capacities=None, **kw):
+        """What-if MRC of the KV block pool at alternative HBM budgets
+        (requires ``autotune=``) — see ``BlockPool.estimate_mrc``."""
+        return self.pool.estimate_mrc(capacities, **kw)
 
     @property
     def stats(self):

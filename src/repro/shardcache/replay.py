@@ -33,6 +33,25 @@ def unsharded_miss_ratio(trace, capacity: int, **kw) -> float:
     return pol.misses / max(1, pol.hits + pol.misses)
 
 
+def lane_miss_ratio(trace, capacity: int, *, policy: str = "clock2q+",
+                    universe: Optional[int] = None, **kw) -> float:
+    """The JAX-lane counterpart of ``unsharded_miss_ratio``: replay
+    through the registered masked engine (``repro.core.engine``) instead
+    of the Python service.  Keys must be dense ids in [0, universe).
+    Used to cross-check the threaded service against the lane zoo for
+    ANY registered policy, not just Clock2Q+."""
+    from repro.core.engine import get_engine
+
+    trace = np.asarray(trace)
+    if universe is None:
+        universe = int(trace.max()) + 1
+    eng = get_engine(policy)
+    st = eng.init(capacity, int(universe), **kw)
+    _, hits = eng.replay(st, np.asarray(trace, np.int32))
+    h = int(np.asarray(hits).sum())
+    return 1.0 - h / max(1, trace.size)
+
+
 @dataclasses.dataclass
 class ReplayReport:
     n_threads: int

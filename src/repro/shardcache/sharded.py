@@ -68,6 +68,9 @@ def apportion(weights: Sequence[float], total: int, lo: int, hi: int) -> List[in
 class ShardedClock2QPlus:
     """Hash-sharded Clock2Q+ cache service (thread-safe facade)."""
 
+    # the registered lane engine that simulates each shard (OnlineTuner)
+    engine_policy = "clock2q+"
+
     def __init__(self, capacity: int, n_shards: int = 4, *,
                  small_frac: float = 0.1, ghost_frac: float = 0.5,
                  window_frac: float = 0.5, skip_limit=None,

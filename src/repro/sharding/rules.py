@@ -20,7 +20,7 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.models.config import ModelConfig
 

@@ -6,7 +6,7 @@ int8 stochastic-rounding gradient compression for cross-pod reduction
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

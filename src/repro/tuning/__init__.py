@@ -5,10 +5,11 @@ it with an offline window sweep (fig13).  This package turns that story
 into a runtime capability:
 
   * ``sweep`` — a vmap-batched sweep engine on the capacity-masked
-    Clock2Q+ state machine: a full tuning grid (capacities x correlation
-    windows x small/ghost fractions) simulated in ONE jitted
-    ``lax.scan``, each lane bit-for-bit equal to the serial
-    ``core.jax_engine`` replay at that configuration.
+    policy core (``repro.core.engine``): a full tuning grid (capacities
+    x correlation windows x small/ghost fractions x policies) simulated
+    in one jitted ``lax.scan`` per policy family, each lane bit-for-bit
+    equal to the serial ``core.jax_engine`` replay at that
+    configuration — they call the SAME registered step function.
   * ``profiler`` — spatially-sampled mini-simulation (hash-sample the
     key space to ~1/64 of the stream, scale capacities by the rate) so
     MRC estimation is cheap enough to run continuously.
@@ -21,7 +22,7 @@ into a runtime capability:
 """
 
 from repro.tuning.sweep import (  # noqa: F401
-    SweepConfig, grid_init, grid_step, lane_hits, make_grid, mrc_grid,
+    SweepConfig, grid_init, lane_hits, make_grid, mrc_grid,
     relabel, serial_sweep_hits, sweep_grid, sweep_hits,
 )
 from repro.tuning.profiler import (  # noqa: F401

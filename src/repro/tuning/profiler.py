@@ -18,6 +18,7 @@ bucket placement.
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Sequence
 
 import numpy as np
@@ -60,9 +61,12 @@ def scale_capacity(capacity: int, rate_shift: int, floor: int = 4) -> int:
 
 def scaled_configs(configs: Sequence[SweepConfig],
                    rate_shift: int) -> list:
-    return [SweepConfig(scale_capacity(c.capacity, rate_shift),
-                        c.window_frac, c.small_frac, c.ghost_frac,
-                        c.skip_limit) for c in configs]
+    # replace() keeps every other knob — including policy and bits — so
+    # the profiler works for any registered lane policy, not just
+    # clock2q+
+    return [dataclasses.replace(
+        c, capacity=scale_capacity(c.capacity, rate_shift))
+        for c in configs]
 
 
 def estimate_sweep(trace: np.ndarray, configs: Sequence[SweepConfig],

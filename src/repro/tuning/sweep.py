@@ -1,18 +1,22 @@
 """Batched miss-ratio-curve (MRC) sweep engine.
 
 Simulates a full tuning grid — capacities x correlation-window sizes x
-small/ghost-fraction variants — in ONE jitted ``lax.scan`` with the grid
-as vmap lanes, replacing serial per-configuration replays (the fig13
-path) with a single device call.
+small/ghost-fraction variants x policies — in per-policy jitted
+``lax.scan`` calls with the grid as vmap lanes, replacing serial
+per-configuration replays (the fig13 path) with a handful of device
+calls (one per policy family in the grid; a single-policy grid is ONE
+call, as before).
 
-vmap lanes must share array shapes, but grid configurations differ in
-segment sizes.  The trick is the *capacity-masked* state: every lane's
+The masked state machinery lives in ``repro.core.engine``: every lane's
 queue arrays are padded to the grid-wide maxima while the LOGICAL sizes
-(``scap``/``mcap``/``gcap``) live in the state as per-lane scalars, and
-the step function wraps its cursors modulo the logical sizes.  Padded
-slots start EMPTY and no cursor ever reaches them, so each lane is
-bit-for-bit the simulation ``core.jax_engine.c2qp_init/step`` would run
-at that exact configuration — asserted in tests/test_tuning.py.
+live in the state as per-lane scalars, and the ONE shared step function
+per policy wraps its cursors modulo the logical sizes.  Each lane is
+bit-for-bit the simulation ``core.jax_engine`` would run at that exact
+configuration — the step functions are literally the same objects
+(asserted in tests/test_tuning.py and tests/test_conformance.py).
+
+This module only depends on the ``core.engine`` API — the grid state
+layout and masked steps are not duplicated here.
 
 Keys are relabelled to a dense ``[0, n_unique)`` id space host-side
 (cache replacement is label-invariant), so the engine accepts raw 64-bit
@@ -22,207 +26,29 @@ location tables stay small.
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, List, Sequence, Tuple
+from typing import List, Sequence, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.jax_engine import (
-    EMPTY, W_GHOST, W_MAIN, W_NONE, W_SMALL, c2qp_sizes,
+from repro.core.engine import (  # noqa: F401  (SweepConfig re-exported here)
+    SweepConfig, get_engine, grid_hit_arrays, grid_hit_counts, grid_init,
 )
-
-
-@dataclasses.dataclass(frozen=True)
-class SweepConfig:
-    """One grid point: a full Clock2Q+ parameterization."""
-    capacity: int
-    window_frac: float = 0.5
-    small_frac: float = 0.1
-    ghost_frac: float = 0.5
-    skip_limit: int = 0
-
-    def sizes(self) -> Tuple[int, int, int, int]:
-        return c2qp_sizes(self.capacity, self.small_frac, self.ghost_frac,
-                          self.window_frac)
+from repro.core.engine import lane_hits  # noqa: F401  (conformance hook)
 
 
 def make_grid(capacities: Sequence[int],
               window_fracs: Sequence[float] = (0.5,),
               small_fracs: Sequence[float] = (0.1,),
               ghost_fracs: Sequence[float] = (0.5,),
-              skip_limit: int = 0) -> List[SweepConfig]:
-    """Cartesian tuning grid, capacity-major (matches np.reshape order)."""
-    return [SweepConfig(int(c), float(wf), float(sf), float(gf), skip_limit)
+              skip_limit: int = 0,
+              policy: str = "clock2q+", **kw) -> List[SweepConfig]:
+    """Cartesian tuning grid, capacity-major (matches np.reshape order).
+    Extra kwargs (e.g. ``bits``) are applied to every config."""
+    return [SweepConfig(int(c), float(wf), float(sf), float(gf), skip_limit,
+                        policy=policy, **kw)
             for c in capacities for wf in window_fracs
             for sf in small_fracs for gf in ghost_fracs]
-
-
-def grid_init(configs: Sequence[SweepConfig], universe: int) -> Dict:
-    """Batched masked state: leading axis = len(configs); queue arrays
-    padded to the grid maxima, logical sizes as per-lane scalars."""
-    n = len(configs)
-    if n == 0:
-        raise ValueError("empty sweep grid")
-    sizes = np.asarray([c.sizes() for c in configs], dtype=np.int32)
-    S, M, G = (int(sizes[:, i].max()) for i in range(3))
-    return dict(
-        skey=jnp.full((n, S), EMPTY), sref=jnp.zeros((n, S), jnp.bool_),
-        sseq=jnp.zeros((n, S), jnp.int32), spos=jnp.zeros((n,), jnp.int32),
-        seqctr=jnp.zeros((n,), jnp.int32),
-        mkey=jnp.full((n, M), EMPTY), mref=jnp.zeros((n, M), jnp.bool_),
-        hand=jnp.zeros((n,), jnp.int32),
-        gkey=jnp.full((n, G), EMPTY), gpos=jnp.zeros((n,), jnp.int32),
-        loc_w=jnp.zeros((n, universe), jnp.int8),
-        loc_s=jnp.zeros((n, universe), jnp.int32),
-        scap=jnp.asarray(sizes[:, 0]), mcap=jnp.asarray(sizes[:, 1]),
-        gcap=jnp.asarray(sizes[:, 2]), window=jnp.asarray(sizes[:, 3]),
-        skip_limit=jnp.asarray([c.skip_limit for c in configs], jnp.int32),
-    )
-
-
-# -- the masked step (jax_engine.c2qp_step with logical sizes from state) ------
-#
-# Two deliberate departures from ``jax_engine.c2qp_step``'s structure, both
-# semantics-preserving (asserted bit-for-bit in tests/test_tuning.py) and
-# both essential for grid throughput under vmap:
-#
-#   1. No lax.switch/cond.  Batched lanes diverge, so a switch executes
-#      every branch and SELECTS whole state arrays — copying each lane's
-#      (universe,)-sized location tables several times per request.  The
-#      four cases are mutually exclusive per lane, so the step is written
-#      as straight-line code with masked single-slot scatters (a False
-#      mask rewrites the current value — a no-op).
-#   2. No lax.while_loop for the clock sweep.  Lanes would advance in
-#      lock-step.  The sweep is deterministic, so the victim is computed
-#      in closed form: with cyclic distance ``d(slot) = (slot - hand)
-#      mod mcap`` and ``skippable = occupied & ref``, the hand stops at
-#      ``vd = min(first non-skippable d, skip_limit)`` (a full fruitless
-#      lap clears every ref and takes the hand slot, ``vd = mcap``),
-#      clearing the refs of exactly the ``d < vd`` slots it walked over.
-
-def _mset(arr: jnp.ndarray, i, val, mask) -> jnp.ndarray:
-    """Masked single-slot scatter: ``arr[i] = val`` where ``mask``, else
-    unchanged (the False branch rewrites ``arr[i]`` to itself, so a
-    garbage/negative ``i`` under a False mask is harmless)."""
-    return arr.at[i].set(jnp.where(mask, val, arr[i]))
-
-
-def grid_step(st: Dict, key: jnp.ndarray) -> Tuple[Dict, jnp.ndarray]:
-    # key < 0 is a padding sentinel: every case mask goes False, so the
-    # step is a no-op and the (non-)hit never counts.  Lets callers pad
-    # traces to a bucketed length and reuse the compiled sweep.
-    active = key >= 0
-    key = jnp.maximum(key, 0)
-    where = st["loc_w"][key]
-    slot = st["loc_s"][key]
-    is_small = active & (where == W_SMALL)
-    is_main = active & (where == W_MAIN)
-    is_ghost = active & (where == W_GHOST)
-    is_none = active & (where == W_NONE)
-    hit = is_small | is_main
-
-    # -- hits: ref-bit updates (small obeys the correlation window) -----------
-    age_ok = (st["seqctr"] - st["sseq"][slot]) >= st["window"]
-    sref = _mset(st["sref"], slot, st["sref"][slot] | age_ok, is_small)
-    mref = _mset(st["mref"], slot, True, is_main)
-
-    # -- ghost hit: leave the ghost ring, then insert into main ---------------
-    gkey = _mset(st["gkey"], slot, EMPTY, is_ghost)
-    loc_w = _mset(st["loc_w"], key, W_NONE, is_ghost)
-    loc_s = st["loc_s"]
-
-    # -- miss: displace the small-FIFO cursor slot ----------------------------
-    spos = st["spos"]
-    displaced = st["skey"][spos]
-    disp = is_none & (displaced >= 0)
-    disp_promote = disp & sref[spos]
-    disp_demote = disp & ~sref[spos]
-    loc_w = _mset(loc_w, displaced, W_NONE, disp)
-
-    # demote path: ghost-push the displaced key
-    g = st["gpos"]
-    gold = gkey[g]
-    loc_w = _mset(loc_w, gold, W_NONE, disp_demote & (gold >= 0))
-    gkey = _mset(gkey, g, displaced, disp_demote)
-    loc_w = _mset(loc_w, displaced, W_GHOST, disp_demote)
-    loc_s = _mset(loc_s, displaced, g, disp_demote)
-    gpos = jnp.where(disp_demote, (g + 1) % st["gcap"], g)
-
-    # -- main insert (ghost hit or promoted displacee): closed-form clock -----
-    do_ins = is_ghost | disp_promote
-    ins_key = jnp.where(is_ghost, key, displaced)
-    M = st["mkey"].shape[-1]  # physical (padded) ring size — static
-    mcap, hand = st["mcap"], st["hand"]
-    idx = jnp.arange(M)
-    valid = idx < mcap
-    d = jnp.where(valid, (idx - hand) % mcap, M + 1)
-    skippable = (st["mkey"] >= 0) & mref
-    k = jnp.min(jnp.where(valid & ~skippable, d, M + 1))
-    k = jnp.minimum(k, mcap)  # no non-skippable slot: full lap
-    vd = jnp.where(st["skip_limit"] > 0,
-                   jnp.minimum(k, st["skip_limit"]), k)
-    ms = (hand + vd) % mcap
-    mref = jnp.where(do_ins, mref & ~(valid & (d < vd)), mref)
-    victim = st["mkey"][ms]
-    loc_w = _mset(loc_w, victim, W_NONE, do_ins & (victim >= 0))
-    loc_w = _mset(loc_w, ins_key, W_MAIN, do_ins)
-    loc_s = _mset(loc_s, ins_key, ms, do_ins)
-    mkey = _mset(st["mkey"], ms, ins_key, do_ins)
-    mref = _mset(mref, ms, False, do_ins)
-    hand = jnp.where(do_ins, (ms + 1) % mcap, hand)
-
-    # -- miss: the new key enters the small FIFO ------------------------------
-    skey = _mset(st["skey"], spos, key, is_none)
-    sref = _mset(sref, spos, False, is_none)
-    sseq = _mset(st["sseq"], spos, st["seqctr"], is_none)
-    loc_w = _mset(loc_w, key, W_SMALL, is_none)
-    loc_s = _mset(loc_s, key, spos, is_none)
-    spos = jnp.where(is_none, (spos + 1) % st["scap"], spos)
-    seqctr = jnp.where(is_none, st["seqctr"] + 1, st["seqctr"])
-
-    st = dict(st, skey=skey, sref=sref, sseq=sseq, spos=spos, seqctr=seqctr,
-              mkey=mkey, mref=mref, hand=hand, gkey=gkey, gpos=gpos,
-              loc_w=loc_w, loc_s=loc_s)
-    return st, hit
-
-
-@jax.jit
-def _sweep_hits(states: Dict, trace: jnp.ndarray) -> jnp.ndarray:
-    """All lanes x the whole trace in one compiled call; per-lane hit
-    counts (the full hit arrays are reduced on-device, so long traces
-    never materialize a lanes x T matrix on the host)."""
-
-    def lane(st):
-        st, hits = jax.lax.scan(grid_step, st, trace)
-        return jnp.sum(hits.astype(jnp.int32))
-
-    return jax.vmap(lane)(states)
-
-
-@jax.jit
-def _lane_hit_arrays(states: Dict, trace: jnp.ndarray) -> jnp.ndarray:
-    def lane(st):
-        _, hits = jax.lax.scan(grid_step, st, trace)
-        return hits
-
-    return jax.vmap(lane)(states)
-
-
-def lane_hits(trace: np.ndarray, config: SweepConfig,
-              universe: int | None = None) -> np.ndarray:
-    """Per-request bool hit array for ONE grid configuration — the
-    conformance hook: lets tests/test_conformance.py compare the sweep
-    engine hit-for-hit against the other four Clock2Q+ implementations
-    (``sweep_hits`` only exposes per-lane counts).  ``trace`` must already
-    be dense int ids in [0, universe)."""
-    trace = np.asarray(trace)
-    if universe is None:
-        universe = int(trace.max()) + 1
-    states = grid_init([config], int(universe))
-    hits = _lane_hit_arrays(states, jnp.asarray(trace, jnp.int32))
-    return np.asarray(hits)[0].astype(bool)
 
 
 def relabel(trace: np.ndarray) -> Tuple[np.ndarray, int]:
@@ -235,8 +61,10 @@ def relabel(trace: np.ndarray) -> Tuple[np.ndarray, int]:
 
 def sweep_hits(trace: np.ndarray, configs: Sequence[SweepConfig],
                pad_pow2: bool = False) -> np.ndarray:
-    """Exact per-config hit counts for ``trace`` over the whole grid, in
-    one jitted call.  Result is aligned with ``configs``.
+    """Exact per-config hit counts for ``trace`` over the whole grid.
+    Result is aligned with ``configs``.  Mixed-policy grids are
+    partitioned by ``config.policy`` (vmap lanes must share a state
+    pytree); each partition is one jitted call.
 
     The location tables are sized to the next power of two above the
     relabelled universe: ids beyond ``n_unique`` are never accessed, so
@@ -245,13 +73,22 @@ def sweep_hits(trace: np.ndarray, configs: Sequence[SweepConfig],
     new unique-key count.  ``pad_pow2`` additionally pads the trace to a
     power-of-two length with no-op sentinels (same jit-cache motive, at
     up-to-2x step cost — worth it only for repeated small sweeps)."""
+    if len(configs) == 0:
+        raise ValueError("empty sweep grid")
     tr, universe = relabel(trace)
     universe = 1 << max(1, universe - 1).bit_length()
     if pad_pow2:
         n = 1 << max(1, tr.size - 1).bit_length()
         tr = np.concatenate([tr, np.full(n - tr.size, -1, np.int32)])
-    states = grid_init(configs, universe)
-    return np.asarray(_sweep_hits(states, jnp.asarray(tr)))
+    tr = jnp.asarray(tr)
+    out = np.empty(len(configs), dtype=np.int64)
+    by_policy: dict = {}
+    for i, c in enumerate(configs):
+        by_policy.setdefault(c.policy, []).append(i)
+    for policy, idx in by_policy.items():
+        states = grid_init([configs[i] for i in idx], universe)
+        out[idx] = np.asarray(grid_hit_counts(policy, states, tr))
+    return out
 
 
 def sweep_grid(trace: np.ndarray, configs: Sequence[SweepConfig],
@@ -292,9 +129,9 @@ def serial_sweep_hits(trace: np.ndarray,
     tr, universe = relabel(trace)
     out = np.empty(len(configs), dtype=np.int64)
     for i, c in enumerate(configs):
-        h, _ = je.replay_np("clock2q+", tr, c.capacity, universe=universe,
-                            small_frac=c.small_frac, ghost_frac=c.ghost_frac,
-                            window_frac=c.window_frac,
-                            skip_limit=c.skip_limit)
+        eng = get_engine(c.policy)
+        kw = {k: getattr(c, k) for k in eng.knobs}
+        h, _ = je.replay_np(c.policy, tr, c.capacity, universe=universe,
+                            **kw)
         out[i] = h
     return out

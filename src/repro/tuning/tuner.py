@@ -10,8 +10,14 @@ ratio — retargets the live cache through the ``retune`` runtime setter,
 which moves segment boundaries via the live-resize protocol (no pause,
 lookups stay exact mid-migration).
 
-Works against both ``ProdClock2QPlus`` and ``ShardedClock2QPlus`` (one
-decision from aggregated traffic, applied to every shard).
+Works against ``ProdClock2QPlus``, ``ShardedClock2QPlus`` (one decision
+from aggregated traffic, applied to every shard) and any cache exposing
+the same small surface: ``capacity``, ``tuning``, ``retune``, and an
+``engine_policy`` attribute naming its registered lane engine (e.g.
+``core.engine.host.EngineCache`` running s3fifo).  The candidate grid
+only spans the knobs that engine actually reads — for a knob-free
+policy like clock the grid collapses to the live point and the tuner
+simply never fires.
 """
 
 from __future__ import annotations
@@ -22,6 +28,7 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
+from repro.core.engine import _FRAC_KNOBS, get_engine
 from repro.core.prodcache import drive_resize
 from repro.tuning import profiler
 from repro.tuning.sweep import SweepConfig, sweep_grid
@@ -44,7 +51,7 @@ class TuneDecision:
 class OnlineTuner:
     """Periodic sampled re-profiling + live retargeting of a cache."""
 
-    def __init__(self, cache, *,
+    def __init__(self, cache, *, policy: Optional[str] = None,
                  window_fracs: Sequence[float] = DEFAULT_WINDOW_FRACS,
                  small_fracs: Optional[Sequence[float]] = None,
                  ghost_fracs: Optional[Sequence[float]] = None,
@@ -54,6 +61,10 @@ class OnlineTuner:
                  confirm_rounds: int = 2, drive_steps: int = 256,
                  max_decisions: int = 256):
         self.cache = cache
+        # which lane engine simulates this cache: explicit policy= wins,
+        # else the cache declares it (engine_policy), else clock2q+
+        self.policy = policy or getattr(cache, "engine_policy", "clock2q+")
+        self.engine = get_engine(self.policy)
         self.window_fracs = tuple(window_fracs)
         # None = hold the cache's current fraction (window-only tuning);
         # pass explicit candidates to tune the queue fractions too.
@@ -141,9 +152,13 @@ class OnlineTuner:
         search space).  A small fraction must fit the small maximum AND
         leave a main that fits the main maximum: a clamped segment would
         silently shrink the effective capacity, so the estimate (made at
-        the unclamped shape) would not describe the applied cache."""
+        the unclamped shape) would not describe the applied cache.
+        Caches without preallocation clamps (no ``max_small`` — e.g. an
+        ``EngineCache`` that re-inits on retune) realize everything."""
         shards = getattr(self.cache, "shards", None) or [self.cache]
         for s in shards:
+            if not hasattr(s, "max_small"):
+                continue
             sc = max(1, int(round(s.capacity * sf)))
             if sc > s.max_small or s.capacity - sc > s.max_main:
                 return False
@@ -157,26 +172,47 @@ class OnlineTuner:
         actually runs.  ProdClock2QPlus uses None for unlimited and
         forces AFTER the skip counter reaches the limit, so its 0 and 1
         both allow exactly one ref-clearing skip; SweepConfig uses 0 for
-        unlimited, hence None -> 0 and n -> max(1, n)."""
+        unlimited, hence None -> 0 and n -> max(1, n).  A cache already
+        speaking the lane convention says so via ``lane_skip_limit``."""
         shards = getattr(self.cache, "shards", None) or [self.cache]
-        sk = shards[0].skip_limit
+        lane = getattr(shards[0], "lane_skip_limit", None)
+        if lane is not None:
+            return int(lane)
+        sk = getattr(shards[0], "skip_limit", None)
         return 0 if sk is None else max(1, int(sk))
+
+    def _live_config(self) -> SweepConfig:
+        """The configuration the cache runs right now, as a grid point.
+        Starts from the engine's own base config (preset defaults for
+        fields the cache does not report) and overlays the cache's
+        current fraction knobs."""
+        base = self.engine.config(self.cache.capacity,
+                                  skip_limit=self._live_skip_limit())
+        cur = self.cache.tuning
+        fracs = {k: float(cur[k]) for k in _FRAC_KNOBS
+                 if k in self.engine.knobs and cur.get(k) is not None}
+        return dataclasses.replace(base, **fracs)
 
     def candidate_grid(self) -> List[SweepConfig]:
         """Current-capacity grid over the candidate knobs (candidates the
         preallocation cannot realize are dropped), with the LIVE
         configuration always included (so the gain comparison is against
-        the cache as it runs today)."""
-        cur = self.cache.tuning
-        sfs = self.small_fracs or (cur["small_frac"],)
-        gfs = self.ghost_fracs or (cur["ghost_frac"],)
-        cap = self.cache.capacity
-        sk = self._live_skip_limit()
-        grid = [SweepConfig(cap, wf, sf, gf, sk)
-                for wf in self.window_fracs for sf in sfs for gf in gfs
+        the cache as it runs today).  Dimensions the engine does not
+        read (``engine.knobs``) collapse to the live value — a
+        knob-free policy yields just the live point."""
+        live = self._live_config()
+        knobs = self.engine.knobs
+        wfs = self.window_fracs if "window_frac" in knobs \
+            else (live.window_frac,)
+        sfs = (self.small_fracs or (live.small_frac,)) \
+            if "small_frac" in knobs else (live.small_frac,)
+        gfs = (self.ghost_fracs or (live.ghost_frac,)) \
+            if "ghost_frac" in knobs else (live.ghost_frac,)
+        grid = [dataclasses.replace(live, window_frac=float(wf),
+                                    small_frac=float(sf),
+                                    ghost_frac=float(gf))
+                for wf in wfs for sf in sfs for gf in gfs
                 if self._realizable(sf, gf)]
-        live = SweepConfig(cap, cur["window_frac"], cur["small_frac"],
-                           cur["ghost_frac"], sk)
         if live not in grid:
             grid.append(live)
         return grid
@@ -212,10 +248,7 @@ class OnlineTuner:
         est = sweep_grid(sampled, profiler.scaled_configs(grid, shift),
                          pad_pow2=True)
         n_sampled = int(sampled.size)
-        cur = self.cache.tuning
-        live = SweepConfig(self.cache.capacity, cur["window_frac"],
-                           cur["small_frac"], cur["ghost_frac"],
-                           self._live_skip_limit())
+        live = self._live_config()
         live_mr = est[grid.index(live)]
         best_i = int(np.nanargmin(est))
         chosen = grid[best_i]
@@ -230,10 +263,10 @@ class OnlineTuner:
         applied = wins and self._streak[1] >= self.confirm_rounds
         if applied:
             self._streak = (None, 0)
-            self.cache.retune(small_frac=chosen.small_frac,
-                              ghost_frac=chosen.ghost_frac,
-                              window_frac=chosen.window_frac)
-            drive_resize(self.cache, self.drive_steps)
+            self.cache.retune(**{k: getattr(chosen, k) for k in _FRAC_KNOBS
+                                 if k in self.engine.knobs})
+            if hasattr(self.cache, "resize_step"):
+                drive_resize(self.cache, self.drive_steps)
         d = TuneDecision(self.n_observed, grid, est, n_sampled, shift,
                          chosen, applied)
         self.decisions.append(d)

@@ -1,11 +1,13 @@
 """Cross-engine differential conformance suite.
 
-The codebase carries five independent Clock2Q+ implementations:
+The codebase carries these Clock2Q+ implementations:
 
   1. the pure-Python reference zoo (``repro.core.policies.clock2qplus``)
   2. the vectorized JAX engine (``repro.core.jax_engine``)
-  3. the batched sweep engine's capacity-masked lane
-     (``repro.tuning.sweep.grid_step``)
+  3. the batched sweep engine's capacity-masked lane (the shared
+     ``repro.core.engine.clock2qplus.step`` — the serial JAX replay and
+     the sweep now call the SAME function, so 2 and 3 differ only in
+     the driver path: degenerate mask vs padded vmap lane)
   4. the Pallas ``cache_sim`` TPU kernel (interpret mode on CPU)
   5. the production array implementation (``ProdClock2QPlus``)
 

@@ -1,0 +1,169 @@
+"""The PolicyEngine protocol surface: registry, multi-policy sweeps,
+the EngineCache host facade, and OnlineTuner against non-Clock2Q+
+policies."""
+
+import numpy as np
+import pytest
+
+import repro.core.engine as engine
+from repro.core.engine.host import EngineCache
+from repro.tuning import OnlineTuner, make_grid, serial_sweep_hits, sweep_hits
+
+
+def _trace(seed=0, T=2000, U=300):
+    rng = np.random.default_rng(seed)
+    out = np.empty(T, np.int64)
+    out[0::2] = rng.integers(0, U, T // 2)
+    out[1::2] = np.arange(T // 2) % (U // 2)
+    return out
+
+
+# -- registry ------------------------------------------------------------------
+
+def test_registry_contents():
+    names = engine.engine_names()
+    for p in ("clock2q+", "clock2q", "s3fifo", "fifo", "clock", "lru"):
+        assert p in names
+
+
+def test_unknown_engine_raises():
+    with pytest.raises(KeyError, match="no registered lane engine"):
+        engine.get_engine("belady")
+
+
+def test_engine_preset_applies_in_config():
+    cfg = engine.get_engine("s3fifo").config(100)
+    assert cfg.policy == "s3fifo"
+    assert cfg.ghost_frac == 1.0  # preset: full-capacity ghost ring
+    cfg2 = engine.get_engine("s3fifo").config(100, ghost_frac=0.25)
+    assert cfg2.ghost_frac == 0.25  # explicit kwargs win
+
+
+# -- multi-policy grids --------------------------------------------------------
+
+def test_grid_init_rejects_mixed_policies():
+    c1 = engine.get_engine("clock2q+").config(50)
+    c2 = engine.get_engine("s3fifo").config(50)
+    with pytest.raises(ValueError, match="ONE policy"):
+        engine.grid_init([c1, c2], 128)
+
+
+def test_sweep_hits_mixed_policy_grid_matches_serial():
+    tr = _trace()
+    configs = (make_grid([30, 90], window_fracs=(0.2, 1.0))
+               + make_grid([30, 90], policy="s3fifo", ghost_fracs=(1.0,))
+               + make_grid([30, 90], policy="clock")
+               + make_grid([60], policy="s3fifo", ghost_fracs=(1.0,),
+                           bits=1))
+    batched = sweep_hits(tr, configs)
+    serial = serial_sweep_hits(tr, configs)
+    np.testing.assert_array_equal(batched, serial)
+
+
+def test_make_grid_policy_and_bits():
+    grid = make_grid([10, 20], policy="s3fifo", bits=1)
+    assert all(c.policy == "s3fifo" and c.bits == 1 for c in grid)
+
+
+# -- EngineCache ---------------------------------------------------------------
+
+def test_engine_cache_matches_replay():
+    tr = _trace(seed=3, T=1500, U=200)
+    for policy in ("s3fifo", "clock", "clock2q+"):
+        cache = EngineCache(policy, 40, 256)
+        hits = cache.access_many(tr % 256)
+        eng = engine.get_engine(policy)
+        st = eng.init(40, 256)
+        _, ref = eng.replay(st, np.asarray(tr % 256, np.int32))
+        np.testing.assert_array_equal(hits, np.asarray(ref).astype(bool))
+        assert cache.hits == int(hits.sum())
+        assert cache.hits + cache.misses == tr.size
+        assert 0.0 <= cache.miss_ratio <= 1.0
+
+
+def test_engine_cache_single_access_and_bounds():
+    cache = EngineCache("fifo", 4, 64)
+    assert cache.access(7) is False
+    assert cache.access(7) is True
+    with pytest.raises(ValueError, match="relabel"):
+        cache.access(64)
+
+
+def test_engine_cache_tuning_surface():
+    cache = EngineCache("s3fifo", 64, 256, small_frac=0.2)
+    assert cache.engine_policy == "s3fifo"
+    assert cache.capacity == 64
+    assert cache.lane_skip_limit == 0
+    t = cache.tuning
+    assert t["small_frac"] == 0.2 and t["ghost_frac"] == 1.0
+    assert "window_frac" not in t  # s3fifo has no correlation window
+
+
+def test_engine_cache_window_retune_is_live():
+    cache = EngineCache("clock2q+", 60, 256)
+    cache.access_many(_trace(seed=5, T=500, U=200) % 256)
+    before = {k: v for k, v in cache.state.items() if k != "window"}
+    cache.retune(window_frac=1.0)
+    assert cache.tuning["window_frac"] == 1.0
+    # live update: only the window scalar changed, residency survived
+    for k, v in before.items():
+        np.testing.assert_array_equal(np.asarray(v),
+                                      np.asarray(cache.state[k]))
+    assert int(cache.state["window"]) == round(1.0 * int(cache.state["scap"]))
+
+
+def test_engine_cache_fraction_retune_reinits():
+    cache = EngineCache("clock2q+", 60, 256)
+    cache.access_many(_trace(seed=6, T=500, U=200) % 256)
+    cache.retune(small_frac=0.3)
+    assert cache.tuning["small_frac"] == 0.3
+    assert int(np.asarray(cache.state["seqctr"])) == 0  # cold state
+
+
+# -- OnlineTuner over non-Clock2Q+ policies ------------------------------------
+
+def test_tuner_candidate_grid_collapses_unread_knobs():
+    cache = EngineCache("s3fifo", 64, 1024)
+    tuner = OnlineTuner(cache, small_fracs=(0.1, 0.3),
+                        retune_every=512, min_scaled_cap=8)
+    assert tuner.policy == "s3fifo"
+    grid = tuner.candidate_grid()
+    # window dim collapsed (s3fifo reads no window), small dim kept
+    assert {c.window_frac for c in grid} == {grid[0].window_frac}
+    assert {c.small_frac for c in grid} == {0.1, 0.3}
+    assert all(c.policy == "s3fifo" for c in grid)
+
+
+def test_tuner_knob_free_policy_grid_is_live_point():
+    cache = EngineCache("clock", 64, 1024)
+    tuner = OnlineTuner(cache, retune_every=512)
+    grid = tuner.candidate_grid()
+    assert len(grid) == 1 and grid[0] == tuner._live_config()
+
+
+@pytest.mark.parametrize("policy,kw", [
+    ("s3fifo", dict(small_fracs=(0.1, 0.4))),
+    ("clock", {}),
+])
+def test_tuner_runs_against_engine_cache(policy, kw):
+    """End-to-end: observe a drifting stream through an EngineCache and
+    let the tuner profile + (maybe) retune — no crash, decisions
+    recorded, and any applied decision actually changed the knobs."""
+    cache = EngineCache(policy, 64, 4096)
+    tuner = OnlineTuner(cache, retune_every=1024, rate_shift=2,
+                        min_scaled_cap=8, min_samples=64,
+                        confirm_rounds=1, min_gain=0.0, **kw)
+    rng = np.random.default_rng(11)
+    for lo in range(0, 8192, 1024):
+        keys = rng.zipf(1.3, 1024) % 4096
+        cache.access_many(keys)
+        tuner.observe_many(keys)
+    assert len(tuner.decisions) >= 4
+    last_applied = None
+    for d in tuner.decisions:
+        assert np.isfinite(d.est_miss_ratios).any()
+        if d.applied:
+            last_applied = d
+    if last_applied is not None:
+        for k, v in cache.tuning.items():
+            assert v == getattr(last_applied.chosen, k)

@@ -1,0 +1,24 @@
+"""The import-layering contract (tools/check_layering.py) as a test:
+``core.engine`` at the bottom, ``serving`` at the top, no module-level
+import pointing upward."""
+
+import pathlib
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "tools"))
+
+import check_layering  # noqa: E402
+
+
+def test_no_upward_module_level_imports():
+    violations = check_layering.check(REPO / "src")
+    assert violations == [], "\n".join(violations)
+
+
+def test_layer_of_longest_prefix_wins():
+    assert check_layering.layer_of("repro.core.engine.layout") == 0
+    assert check_layering.layer_of("repro.core.jax_engine") == 1
+    assert check_layering.layer_of("repro.tuning.sweep") == 3
+    assert check_layering.layer_of("repro.serving.engine") == 4
+    assert check_layering.layer_of("repro.models.model") is None

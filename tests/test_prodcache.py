@@ -2,7 +2,6 @@
 DOING-IO, dirty handling, live resize, and the Fig.-6 race protocol."""
 
 import numpy as np
-import pytest
 
 from repro.core import make_policy
 from repro.core.prodcache import EMPTY, ProdClock2QPlus

@@ -4,7 +4,6 @@ resume->serve pipeline across subsystems."""
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import get_config, reduced

@@ -1,7 +1,6 @@
 """Training-stack tests: loss descends, microbatch-accumulation
 equivalence, checkpoint roundtrip/resume, data pipeline determinism."""
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

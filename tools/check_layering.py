@@ -1,0 +1,116 @@
+#!/usr/bin/env python
+"""Import-layering checker: the dependency direction of the repo.
+
+Enforced order (lower number = lower layer; module-level imports may
+only point DOWNWARD or sideways within a package, never upward):
+
+    0  repro.core.engine     the capacity-masked policy core
+    1  repro.core            reference zoo, prod cache, replay drivers
+    2  repro.traceio         trace storage/streaming
+    3  repro.tuning, repro.shardcache, repro.kvcache, repro.kernels
+    4  repro.serving
+
+Only MODULE-LEVEL imports count: a function-level (lazy) import is an
+explicit escape hatch for same-layer or upward references on cold paths
+(e.g. ``kvcache.pool`` building an ``OnlineTuner`` only when
+``autotune=`` is requested) and is deliberately exempt.  Packages not
+listed (models, checkpoint, training, ...) are outside the cache
+subsystem and unconstrained.
+
+Run from the repo root:  python tools/check_layering.py
+Exits non-zero listing every violation.  Also run by
+tests/test_layering.py, so `pytest` catches violations locally.
+"""
+
+from __future__ import annotations
+
+import ast
+import pathlib
+import sys
+
+# longest prefix wins: repro.core.engine is layer 0, the rest of
+# repro.core layer 1
+LAYERS = {
+    "repro.core.engine": 0,
+    "repro.core": 1,
+    "repro.traceio": 2,
+    "repro.tuning": 3,
+    "repro.shardcache": 3,
+    "repro.kvcache": 3,
+    "repro.kernels": 3,
+    "repro.serving": 4,
+}
+
+
+def layer_of(module: str) -> int | None:
+    best = None
+    for prefix, layer in LAYERS.items():
+        if module == prefix or module.startswith(prefix + "."):
+            if best is None or len(prefix) > len(best[0]):
+                best = (prefix, layer)
+    return None if best is None else best[1]
+
+
+def module_name(path: pathlib.Path, src: pathlib.Path) -> str:
+    rel = path.relative_to(src).with_suffix("")
+    parts = list(rel.parts)
+    if parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+def module_level_imports(tree: ast.Module):
+    """(lineno, imported-module) for imports at module scope only —
+    anything nested in a function/method body is a lazy import and
+    exempt.  Class-body imports count as module level (they run at
+    import time)."""
+    out = []
+
+    def walk(node):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.Lambda)):
+                continue
+            if isinstance(child, ast.Import):
+                out.extend((child.lineno, a.name) for a in child.names)
+            elif isinstance(child, ast.ImportFrom):
+                if child.level == 0 and child.module:
+                    out.append((child.lineno, child.module))
+            else:
+                walk(child)
+
+    walk(tree)
+    return out
+
+
+def check(src: pathlib.Path):
+    violations = []
+    for path in sorted(src.rglob("*.py")):
+        mod = module_name(path, src)
+        mod_layer = layer_of(mod)
+        if mod_layer is None:
+            continue
+        tree = ast.parse(path.read_text(), filename=str(path))
+        for lineno, imported in module_level_imports(tree):
+            imp_layer = layer_of(imported)
+            if imp_layer is not None and imp_layer > mod_layer:
+                violations.append(
+                    f"{path}:{lineno}: {mod} (layer {mod_layer}) imports "
+                    f"{imported} (layer {imp_layer}) at module level")
+    return violations
+
+
+def main() -> int:
+    src = pathlib.Path(__file__).resolve().parent.parent / "src"
+    violations = check(src)
+    for v in violations:
+        print(v)
+    if violations:
+        print(f"\n{len(violations)} layering violation(s)")
+        return 1
+    print("layering OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -6,7 +6,7 @@ tolerance rules, writes a ``BENCH_ci.json`` verdict report, and exits
 non-zero on any regression.
 
     # gate (what the bench-regression CI job runs)
-    REPRO_BENCH_CI=1 python -m benchmarks.run --only fig7,fig13,fig_scenario_matrix,fig_policy_tuning,perf_cpu,perf_sweep_grid
+    REPRO_BENCH_CI=1 python -m benchmarks.run --only fig7,fig13,fig_scenario_matrix,fig_policy_tuning,perf_cpu,perf_obs,perf_sweep_grid
     python -m benchmarks.check_regression --out BENCH_ci.json
 
     # refresh the baseline after an intentional change (same bench run,

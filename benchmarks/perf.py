@@ -5,6 +5,7 @@ throughput on CPU."""
 from __future__ import annotations
 
 import time
+from pathlib import Path
 from typing import List
 
 import jax
@@ -15,6 +16,8 @@ from benchmarks import common
 from repro.core import jax_engine as je
 from repro.core import make_policy
 from repro.core.prodcache import ProdClock2QPlus
+
+REPO = Path(__file__).resolve().parents[1]
 
 
 def perf_cpu_overhead() -> List[str]:
@@ -35,6 +38,91 @@ def perf_cpu_overhead() -> List[str]:
             us = 1e6 * (time.perf_counter() - t0) / len(w)
             rows.append(common.row(f"perf/cpu/{impl}/{wname}", us,
                                    len(w)))
+    return rows
+
+
+def perf_obs_overhead() -> List[str]:
+    """Hit-path cost of the obs layer: fully instrumented
+    ``ProdClock2QPlus`` vs the same cache under a ``NullSink``, replaying
+    an all-hot trace (the line-rate path the paper optimizes).  The
+    instrumented/null wall-time ratio is the gated row —
+    ``perf/obs/ratio`` <= 1.05x in baseline.json — so any future
+    instrumentation that sneaks work onto the hit path fails CI.
+
+    Also produces the CI telemetry artifact: a 2-thread sharded replay
+    with tuner + rebalance activity, its merged snapshot written as
+    ``experiments/obs_snapshot.json`` (+ ``.prom``) and rendered through
+    tools/obsreport.py to prove the report path works end to end."""
+    import sys
+
+    from repro.obs import NullSink
+    from repro.obs import export as obs_export
+    from repro.shardcache import ShardedClock2QPlus
+    from repro.shardcache.replay import replay_threaded
+    from repro.tuning import OnlineTuner
+
+    rows = []
+    rng = np.random.default_rng(3)
+    warm = rng.integers(0, 2048, 16_000).tolist()  # populate (untimed)
+    hot = np.tile(np.arange(256), 400).tolist()    # ~100% hits (timed)
+
+    def run_once(pol) -> float:
+        acc = pol.access
+        for k in warm:
+            acc(k)
+        t0 = time.perf_counter()
+        for k in hot:
+            acc(k)
+        return time.perf_counter() - t0
+
+    # interleaved best-of-5: same machine noise hits both variants
+    best = {"instrumented": float("inf"), "null": float("inf")}
+    for _ in range(5):
+        best["instrumented"] = min(
+            best["instrumented"], run_once(ProdClock2QPlus(1024)))
+        best["null"] = min(
+            best["null"],
+            run_once(ProdClock2QPlus(1024, obs=NullSink(src="cache"))))
+    us_i = 1e6 * best["instrumented"] / len(hot)
+    us_n = 1e6 * best["null"] / len(hot)
+    rows.append(common.row("perf/obs/instrumented", us_i, len(hot)))
+    rows.append(common.row("perf/obs/null", us_n, len(hot)))
+    # the gate: ratio rides the us column (us_factor rules are one-sided)
+    rows.append(common.row("perf/obs/ratio", us_i / max(1e-12, us_n),
+                           us_i))
+
+    # -- CI telemetry artifact ------------------------------------------------
+    cache = ShardedClock2QPlus(512, n_shards=4, max_capacity=1024)
+    tuner = OnlineTuner(cache, retune_every=16_384,
+                        window_fracs=(0.1, 0.5, 1.0), min_gain=-1.0,
+                        confirm_rounds=1, obs=cache.obs)
+    art = (rng.zipf(1.2, 32_768) % 4096).astype(np.int64)
+    replay_threaded(cache, art, n_threads=2, batch_size=512,
+                    obs=cache.obs)
+    tuner.observe_many(art)
+    # a deterministic rebalance + retune so the artifact always carries
+    # the full event vocabulary, whatever the tuner decided organically
+    caps = [s.capacity for s in cache.shards]
+    cache.set_shard_capacities([caps[0] + 16, caps[1] - 16] + caps[2:])
+    while not cache.rebalance_step(128):
+        pass
+    cache.retune(window_frac=0.3)
+    snap = cache.obs_snapshot()
+    out_json = REPO / "experiments" / "obs_snapshot.json"
+    out_json.parent.mkdir(parents=True, exist_ok=True)
+    out_json.write_text(snap.to_json(indent=1))
+    (REPO / "experiments" / "obs_snapshot.prom").write_text(
+        obs_export.to_prometheus(snap))
+    sys.path.insert(0, str(REPO / "tools"))
+    import obsreport
+    report = obsreport.render(
+        obs_export.Snapshot.from_json(out_json.read_text()))
+    assert "cache_hits_total" in report
+    rows.append(common.row("perf/obs/snapshot_series", 0.0,
+                           len(snap.counters) + len(snap.gauges)
+                           + len(snap.hists)))
+    rows.append(common.row("perf/obs/snapshot_events", 0.0,
+                           len(snap.events)))
     return rows
 
 

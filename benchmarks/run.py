@@ -32,6 +32,7 @@ BENCHES = [
     ("fig_sampled_mrc", tuning.fig_sampled_mrc),
     ("fig_tuner", tuning.fig_tuner_converge),
     ("perf_cpu", perf.perf_cpu_overhead),
+    ("perf_obs", perf.perf_obs_overhead),
     ("perf_sweep_grid", tuning.perf_sweep_grid),
     ("perf_shard_scalability", shard.perf_shard_scalability),
     ("perf_engine", perf.perf_jax_engine),

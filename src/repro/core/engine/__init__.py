@@ -171,7 +171,7 @@ def _replay_carry():
 
 
 def replay_chunked(policy: str, chunks, capacity: int, universe: int,
-                   state: Optional[Dict] = None, **kw):
+                   state: Optional[Dict] = None, on_chunk=None, **kw):
     """Replay an iterable of key chunks, threading the scan state across
     chunk boundaries.  ``lax.scan`` is sequential, so splitting a trace
     at ANY boundary and carrying the state is bit-identical to the
@@ -181,7 +181,9 @@ def replay_chunked(policy: str, chunks, capacity: int, universe: int,
     ragged tail chunk triggers a second compile.
 
     Returns ``(hits, n_requests, final_state)`` — pass ``state`` back in
-    to continue a stream across calls.
+    to continue a stream across calls.  ``on_chunk(n, hits)`` (running
+    totals) fires after each chunk — the progress hook drivers hang
+    telemetry on without this package importing any.
     """
     universe = int(universe)
     if not (0 < universe <= np.iinfo(np.int32).max):
@@ -213,6 +215,8 @@ def replay_chunked(policy: str, chunks, capacity: int, universe: int,
         st, h = carry(policy, st, jnp.asarray(arr, jnp.int32))
         hits += int(np.asarray(jnp.sum(h)))
         n += int(arr.shape[0])
+        if on_chunk is not None:
+            on_chunk(n, hits)
     return hits, n, st
 
 

@@ -61,11 +61,16 @@ def replay_np(policy: str, trace: np.ndarray, capacity: int,
 
 def replay_store(policy: str, store, capacity: int,
                  universe: int | None = None,
-                 chunk_size: int = 1 << 20, **kw):
+                 chunk_size: int = 1 << 20, obs=None, **kw):
     """``replay_np`` for an on-disk trace: stream a ``TraceStore`` (or
     anything ``repro.traceio.iter_chunks`` accepts) in ``chunk_size``
     pieces.  Returns (hit count, miss ratio), bit-identical to loading
-    the whole trace and calling ``replay_np``."""
+    the whole trace and calling ``replay_np``.
+
+    With an ``obs`` sink, each chunk leaves a periodic snapshot row:
+    progress gauges (accesses so far, running miss ratio) plus one
+    ``EV_SNAPSHOT`` event, via the engine's ``on_chunk`` hook — the
+    engine package itself stays telemetry-free."""
     from repro.traceio.store import TraceStore, iter_chunks
 
     if universe is None:
@@ -76,6 +81,20 @@ def replay_store(policy: str, store, capacity: int,
         else:
             raise ValueError("pass universe= explicitly when streaming "
                              "from a one-shot chunk iterable")
+    if obs is not None:
+        from repro.obs import EV_SNAPSHOT
+        g_n = obs.gauge("replay_accesses", (),
+                        "accesses replayed so far").labels()
+        g_mr = obs.gauge("replay_miss_ratio", (),
+                         "running miss ratio").labels()
+
+        def on_chunk(n_done, hits_done):
+            mr = 1.0 - hits_done / max(1, n_done)
+            g_n.set(float(n_done))
+            g_mr.set(mr)
+            obs.emit(EV_SNAPSHOT, a=n_done, b=hits_done, c=mr)
+
+        kw["on_chunk"] = on_chunk
     h, n, _ = replay_chunked(policy, iter_chunks(store, chunk_size),
                              capacity, int(universe), **kw)
     return h, 1.0 - h / max(1, n)

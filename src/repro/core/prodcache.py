@@ -33,6 +33,12 @@ import dataclasses
 
 import numpy as np
 
+from repro import obs as obs_mod
+from repro.obs import (
+    EV_EVICT, EV_GHOST_PROMOTE, EV_IO_WAIT, EV_RESIZE, EV_RETUNE,
+    EV_WINDOW_ENTER, EV_WINDOW_EXIT, FLOW_KINDS,
+)
+
 # shared sentinel (repro.core.engine.layout is pure Python — importing it
 # keeps this module JAX-free); re-exported here for the many callers that
 # do `from repro.core.prodcache import EMPTY`
@@ -84,7 +90,7 @@ class ProdClock2QPlus:
                  skip_limit=None, dirty_scan_limit: int = 16,
                  max_capacity: int = 0, track_io: bool = False,
                  max_small_frac: float = 0.0, max_ghost_frac: float = 0.0,
-                 min_small_frac: float = 1.0):
+                 min_small_frac: float = 1.0, obs=None, shard_id: int = 0):
         self.track_io = track_io  # mark entries DOING-IO until io_done()
         self.max_capacity = max(capacity, max_capacity or capacity)
         self._small_frac = small_frac
@@ -136,18 +142,77 @@ class ProdClock2QPlus:
         # payload free list (stack)
         self.free_blocks = list(range(n_ent - 1, -1, -1))
 
+        # observability (repro.obs): on by default, per-cache sink.  The
+        # instruments below ARE the stats — ``hits``/``misses``/
+        # ``io_waits``/``flows`` are thin views over them, so there is
+        # exactly one schema to export and nothing to reconcile.  Hot
+        # paths increment bound instruments directly (plain attribute /
+        # array-cell adds); events fire on state transitions only.
+        self.shard_id = int(shard_id)
+        lbl = str(self.shard_id)
+        if obs is None:
+            obs = obs_mod.ObsSink(src=f"cache/shard{lbl}",
+                                  labels={"shard": lbl})
+        self.obs = obs
+        self._ring = obs.ring
+        self._c_hit_small = obs.counter(
+            "cache_hits_total", ("shard", "queue"),
+            "resident hits by queue").labels(lbl, "small")
+        self._c_hit_main = obs.counter(
+            "cache_hits_total", ("shard", "queue")).labels(lbl, "main")
+        self._c_miss = obs.counter(
+            "cache_misses_total", ("shard",), "misses (incl. ghost "
+            "hits, which readmit to main)").labels(lbl)
+        self._c_io_wait = obs.counter(
+            "cache_io_waits_total", ("shard",),
+            "hits on DOING-IO entries").labels(lbl)
+        flow_fam = obs.counter("cache_flow_total", ("shard", "flow"),
+                               "Clock2Q+ queue-transition counters")
+        self._c_flow = {k: flow_fam.labels(lbl, k) for k in FLOW_KINDS}
+        self._c_f_s2m = self._c_flow["small_to_main"]
+        self._c_f_s2g = self._c_flow["small_to_ghost"]
+        self._c_f_g2m = self._c_flow["ghost_to_main"]
+        self._c_f_evict = self._c_flow["evict_main"]
+        self._c_f_bypass = self._c_flow["small_bypass"]
+        cap_fam = obs.gauge("cache_capacity", ("shard", "segment"),
+                            "logical segment sizes (slots)")
+        self._g_cap = {seg: cap_fam.labels(lbl, seg)
+                       for seg in ("total", "small", "main", "ghost",
+                                   "window")}
+        self._g_resident = obs.gauge(
+            "cache_resident_entries", ("shard",),
+            "resident entries (set at snapshot time)").labels(lbl)
+        obs.on_collect(self._obs_collect)
+
         # cursors / logical sizes
         self.spos = 0
         self.hand = 0
         self.small_seq = 0
         self.set_capacity(capacity)
 
-        # stats
-        self.hits = 0
-        self.misses = 0
-        self.io_waits = 0
-        self.flows = {"small_to_main": 0, "small_to_ghost": 0,
-                      "ghost_to_main": 0, "evict_main": 0, "small_bypass": 0}
+    def _obs_collect(self) -> None:
+        self._g_resident.set(float(len(self)))
+
+    # -- stats (views over the obs counter families) --------------------------
+    @property
+    def hits(self) -> int:
+        return self._c_hit_small.value + self._c_hit_main.value
+
+    @property
+    def misses(self) -> int:
+        return self._c_miss.value
+
+    @property
+    def io_waits(self) -> int:
+        return self._c_io_wait.value
+
+    @property
+    def flows(self) -> dict:
+        """Queue-transition counters, derived from the
+        ``cache_flow_total`` family in canonical ``obs.FLOW_KINDS``
+        order (same keys as always — the sharded aggregate derives from
+        the identical schema, so the key sets cannot drift)."""
+        return {k: self._c_flow[k].value for k in FLOW_KINDS}
 
     # -- sizing ---------------------------------------------------------------
     def set_capacity(self, capacity: int) -> None:
@@ -173,6 +238,12 @@ class ProdClock2QPlus:
         if tail.size:
             for off in np.nonzero(tail != EMPTY)[0].tolist():
                 self._ghost_remove_slot(self.ghost_cap + off)
+        g = self._g_cap
+        g["total"].value = float(capacity)
+        g["small"].value = float(self.small_cap)
+        g["main"].value = float(self.main_cap)
+        g["ghost"].value = float(self.ghost_cap)
+        g["window"].value = float(self.window)
 
     @property
     def tuning(self) -> dict:
@@ -206,7 +277,11 @@ class ProdClock2QPlus:
             self._ghost_frac = ghost_frac
         if window_frac is not None:
             self._window_frac = window_frac
+        old_window = self.window
         self.begin_resize(self.capacity)
+        if self._ring.enabled:
+            self._ring.emit(EV_RETUNE, self.shard_id, a=old_window,
+                            b=self.window)
 
     # -- hashing ---------------------------------------------------------------
     def _h(self, key: int, n_buckets: int) -> int:
@@ -331,8 +406,11 @@ class ProdClock2QPlus:
                 continue
             # victim
             self._hash_remove(eid)
-            self.flows["evict_main"] += 1
+            self._c_f_evict.value += 1
             self._last_evicted = (int(self.key[eid]), int(self.block[eid]))
+            if self._ring.enabled:
+                self._ring.emit(EV_EVICT, self.shard_id,
+                                a=self._last_evicted[0], b=1)
             self.free_blocks.append(int(self.block[eid]))
             self.key[eid] = EMPTY
             self.block[eid] = EMPTY
@@ -374,10 +452,12 @@ class ProdClock2QPlus:
             self._hash_remove(s)
             self.key[s] = EMPTY
             if self.ref[s]:
-                self.flows["small_to_main"] += 1
+                self._c_f_s2m.value += 1
                 self._insert_main(key, block, dirty=False, io=False)
             else:
-                self.flows["small_to_ghost"] += 1
+                self._c_f_s2g.value += 1
+                if self._ring.enabled:
+                    self._ring.emit(EV_EVICT, self.shard_id, a=key, b=0)
                 self._ghost_push(key)
                 self.free_blocks.append(block)
                 self._last_evicted = (key, block)
@@ -393,33 +473,45 @@ class ProdClock2QPlus:
         if eid == EMPTY:
             eid = self._find_stray(key)  # resize protocol: check old location
         if eid != EMPTY:
-            self.hits += 1
             if eid < self.max_small:  # small FIFO hit: correlation window
-                if self.small_seq - int(self.seq[eid]) >= self.window:
+                self._c_hit_small.value += 1
+                age = self.small_seq - int(self.seq[eid])
+                if age >= self.window and not self.ref[eid]:
+                    # the entry leaves its correlation window: this first
+                    # qualifying re-reference is a state transition (the
+                    # ref bit flips), so it may emit — later hits don't
+                    if self._ring.enabled:
+                        self._ring.emit(EV_WINDOW_EXIT, self.shard_id,
+                                        a=key, b=age)
                     self.ref[eid] = True
             else:
+                self._c_hit_main.value += 1
                 self.ref[eid] = True
             if dirty:
                 self.dirty[eid] = True
             if pin:
                 self.pin[eid] += 1
             if self.io[eid]:
-                self.io_waits += 1
+                self._c_io_wait.value += 1
+                if self._ring.enabled:
+                    self._ring.emit(EV_IO_WAIT, self.shard_id, a=key)
             return AccessResult(True, int(self.block[eid]),
                                 io_pending=bool(self.io[eid]))
 
-        self.misses += 1
+        self._c_miss.value += 1
         gslot = self._ghost_lookup(key)
         bypass = False
         if gslot != EMPTY:
             self._ghost_remove_slot(gslot)
-            self.flows["ghost_to_main"] += 1
+            self._c_f_g2m.value += 1
+            if self._ring.enabled:
+                self._ring.emit(EV_GHOST_PROMOTE, self.shard_id, a=key)
             eid = self._insert_main(key, None, dirty=dirty, io=self.track_io)
             block = int(self.block[eid])
         else:
             s = self._evict_small_slot()
             if s < 0:
-                self.flows["small_bypass"] += 1
+                self._c_f_bypass.value += 1
                 bypass = True
                 eid = self._insert_main(key, None, dirty=dirty, io=self.track_io)
                 block = int(self.block[eid])
@@ -435,6 +527,8 @@ class ProdClock2QPlus:
                 self.seq[s] = self.small_seq
                 self.small_seq += 1
                 self._hash_insert(s)
+                if self._ring.enabled:  # correlation window opens
+                    self._ring.emit(EV_WINDOW_ENTER, self.shard_id, a=key)
         if pin:
             self.pin[eid] += 1
         ek, eb = self._last_evicted
@@ -539,6 +633,9 @@ class ProdClock2QPlus:
         resize's hash migration is still pending it is completed first
         (two old bucket arrays cannot coexist)."""
         self.finish_rehash()
+        if self._ring.enabled:
+            self._ring.emit(EV_RESIZE, self.shard_id, a=self.capacity,
+                            b=new_capacity)
         self.set_capacity(new_capacity)
         n_new = _next_pow2(2 * (self.small_cap + self.main_cap))
         if n_new != self.n_buckets:

@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs as obs_mod
 from repro.core.prodcache import EMPTY, ProdClock2QPlus, drive_resize
 from repro.models.config import ModelConfig
 from repro.shardcache import ShardedClock2QPlus
@@ -29,6 +30,8 @@ from repro.shardcache import ShardedClock2QPlus
 
 @dataclasses.dataclass
 class PoolStats:
+    """Point-in-time view over the pool's obs counters (compat shim —
+    the ``pool_*_total`` families are the source of truth)."""
     hits: int = 0
     misses: int = 0
     swap_in: int = 0       # host -> HBM copies
@@ -47,7 +50,7 @@ class BlockPool:
                  n_host_blocks: int = 0, dtype=jnp.float32, *,
                  window_frac: float = 0.5, max_hbm_blocks: int = 0,
                  n_shards: int = 0, rebalance_headroom: float = 1.0,
-                 autotune=False):
+                 autotune=False, obs=None):
         self.cfg = cfg
         self.bs = block_size
         self.n_blocks = n_hbm_blocks
@@ -82,7 +85,24 @@ class BlockPool:
         self.vpool = jnp.zeros_like(self.kpool)
         self.host: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
         self.n_host_blocks = n_host_blocks or 4 * n_hbm_blocks
-        self.stats = PoolStats()
+        # pool-tier telemetry (the policy keeps its own sink; merged by
+        # obs_snapshot()).  ``stats`` is a compat view over these.
+        self.obs = obs_mod.ObsSink(src="pool") if obs is None else obs
+        lookup_fam = self.obs.counter("pool_lookups_total", ("result",),
+                                      "block lookups by outcome")
+        self._c_hit = lookup_fam.labels("hit")
+        self._c_miss = lookup_fam.labels("miss")
+        swap_fam = self.obs.counter("pool_swaps_total", ("dir",),
+                                    "HBM<->host block copies")
+        self._c_swap_in = swap_fam.labels("in")
+        self._c_swap_out = swap_fam.labels("out")
+        self._c_drop = self.obs.counter(
+            "pool_drops_total", (), "clean evictions (host copy "
+            "already existed)").labels()
+        self._g_host = self.obs.gauge(
+            "pool_host_blocks", (), "blocks mirrored in the host "
+            "tier").labels()
+        self.obs.on_collect(lambda: self._g_host.set(float(len(self.host))))
         # autotune=True (defaults) or a dict of OnlineTuner kwargs: the
         # tuner observes the block-key stream through lookup() and
         # retargets the policy's window / queue fractions online via the
@@ -92,7 +112,23 @@ class BlockPool:
         if autotune:
             from repro.tuning import OnlineTuner
             tkw.setdefault("retune_every", max(1024, 32 * n_hbm_blocks))
-            self.tuner = OnlineTuner(self.policy, **tkw)
+            self.tuner = OnlineTuner(self.policy, obs=self.obs, **tkw)
+
+    @property
+    def stats(self) -> PoolStats:
+        """The historical stats surface, derived from the obs counters."""
+        return PoolStats(hits=self._c_hit.value, misses=self._c_miss.value,
+                         swap_in=self._c_swap_in.value,
+                         swap_out=self._c_swap_out.value,
+                         drops=self._c_drop.value)
+
+    def obs_snapshot(self) -> "obs_mod.Snapshot":
+        """Merged pool + replacement-policy (+ tuner, which shares the
+        pool's sink) telemetry."""
+        pol_snap = self.policy.obs_snapshot() \
+            if hasattr(self.policy, "obs_snapshot") \
+            else self.policy.obs.snapshot()
+        return obs_mod.merge([self.obs.snapshot(), pol_snap])
 
     # -- residency ------------------------------------------------------------
     def lookup(self, key: int, pin: bool = True) -> Tuple[int, bool]:
@@ -103,9 +139,9 @@ class BlockPool:
             self.tuner.observe(key)
         r = self.policy.access(key, pin=pin)
         if r.hit:
-            self.stats.hits += 1
+            self._c_hit.value += 1
             return r.block, False
-        self.stats.misses += 1
+        self._c_miss.value += 1
         if r.evicted_key != EMPTY:
             self._on_evict(r.evicted_key, r.evicted_block)
         if key in self.host:
@@ -118,18 +154,18 @@ class BlockPool:
     def _on_evict(self, key: int, slot: int) -> None:
         """HBM eviction: dirty blocks (no host copy) are swapped out."""
         if key in self.host:
-            self.stats.drops += 1
+            self._c_drop.value += 1
             return
         if len(self.host) < self.n_host_blocks:
             self.host[key] = (np.asarray(self.kpool[:, slot]),
                               np.asarray(self.vpool[:, slot]))
-            self.stats.swap_out += 1
+            self._c_swap_out.value += 1
 
     def _swap_in(self, key: int, slot: int) -> None:
         k, v = self.host[key]
         self.kpool = self.kpool.at[:, slot].set(jnp.asarray(k))
         self.vpool = self.vpool.at[:, slot].set(jnp.asarray(v))
-        self.stats.swap_in += 1
+        self._c_swap_in.value += 1
 
     def write_block(self, slot: int, k: jnp.ndarray, v: jnp.ndarray,
                     key: Optional[int] = None) -> None:
@@ -157,7 +193,7 @@ class BlockPool:
         if key not in self.host and len(self.host) < self.n_host_blocks:
             self.host[key] = (np.asarray(self.kpool[:, slot]),
                               np.asarray(self.vpool[:, slot]))
-            self.stats.swap_out += 1
+            self._c_swap_out.value += 1
         self.policy.clean(key)
 
     def run_flusher(self, max_blocks: int = 4) -> int:
@@ -196,7 +232,15 @@ class BlockPool:
         est = profiler.estimate_sweep(trace, configs, rate_shift)
         # best window per capacity: the pool would retune after a resize
         per_cap = est.reshape(len(caps), len(wfs))
-        return {c: float(np.nanmin(per_cap[i])) for i, c in enumerate(caps)}
+        out = {c: float(np.nanmin(per_cap[i])) for i, c in enumerate(caps)}
+        # what-if MRC as a gauge family: the last estimate at each
+        # alternative HBM budget stays scrapeable between calls
+        fam = self.obs.gauge("pool_est_miss_ratio", ("capacity",),
+                             "sampled-MRC estimate at alternative HBM "
+                             "budgets (last estimate_mrc call)")
+        for c, mr in out.items():
+            fam.labels(str(c)).set(mr)
+        return out
 
     # -- elastic resize (paper §4.2 -> HBM budget changes) -----------------------
     def resize(self, new_n_blocks: int, steps_per_call: int = 64) -> None:

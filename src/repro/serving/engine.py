@@ -14,12 +14,14 @@ they become evictable, exactly as §4.1.3 prescribes.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs as obs_mod
 from repro.kvcache.manager import PagedKVManager
 from repro.kvcache.pool import BlockPool
 from repro.models import transformer as T
@@ -47,7 +49,7 @@ class ServingEngine:
                  hbm_blocks: int = 64, max_batch: int = 8,
                  max_blocks_per_seq: int = 64, n_shards: int = 0,
                  max_hbm_blocks: int = 0, rebalance_headroom: float = 1.0,
-                 autotune=False):
+                 autotune=False, obs=None):
         assert api.cfg.family in ("dense", "vlm", "moe"), \
             "paged serving targets the attention-KV families"
         self.api = api
@@ -68,6 +70,26 @@ class ServingEngine:
         self.mgr = PagedKVManager(api.cfg, self.pool)
         self.max_batch = max_batch
         self.max_blocks = max_blocks_per_seq
+        # engine-tier telemetry (pool/policy/tuner keep their own sinks;
+        # obs_snapshot() merges the whole stack)
+        self.obs = obs_mod.ObsSink(src="serving") if obs is None else obs
+        self._c_requests = self.obs.counter(
+            "serve_requests_total", (), "requests completed").labels()
+        self._c_tokens = self.obs.counter(
+            "serve_tokens_total", (), "tokens generated (incl. the "
+            "prefill token)").labels()
+        self._h_latency = self.obs.histogram(
+            "serve_request_latency_seconds", (),
+            "admit -> completion wall time per request").labels()
+        self._h_decode = self.obs.histogram(
+            "serve_decode_step_seconds", (),
+            "one batched decode step, wall time").labels()
+        depth_fam = self.obs.gauge(
+            "serve_queue_depth", ("stage",),
+            "requests pending admission / actively decoding")
+        self._g_pending = depth_fam.labels("pending")
+        self._g_active = depth_fam.labels("active")
+        self._admit_ts: Dict[int, float] = {}
         self._decode_fn = jax.jit(
             lambda params, toks, kp, vp, bt, lens, sid, soff:
             T.forward_decode_paged(api.cfg, params, toks, kp, vp, bt, lens,
@@ -112,6 +134,7 @@ class ServingEngine:
             # admit
             while pending and len(active) < self.max_batch:
                 r = pending.pop(0)
+                self._admit_ts[r.req_id] = time.perf_counter()
                 st, fill = self.mgr.admit(r.req_id, r.prompt)
                 first = self._prefill_into_pool(st, fill)
                 st.out_tokens.append(first)  # from prefill logits
@@ -120,8 +143,14 @@ class ServingEngine:
                         if len(self.mgr.seqs[rid].out_tokens) >= r.max_new]:
                 st = self.mgr.seqs[rid]
                 done.append(Completion(rid, list(st.out_tokens)))
+                self._h_latency.observe(
+                    time.perf_counter() - self._admit_ts.pop(rid))
+                self._c_requests.value += 1
+                self._c_tokens.value += len(st.out_tokens)
                 self.mgr.release(rid)
                 del active[rid]
+            self._g_pending.set(float(len(pending)))
+            self._g_active.set(float(len(active)))
             if not active:
                 continue
             # one decode step for the whole active batch: each sequence's
@@ -146,6 +175,7 @@ class ServingEngine:
                 sids.append(sids[-1])
                 soffs.append(soffs[-1])
                 bts.append(bts[-1])
+            t_step = time.perf_counter()
             logits, kp, vp = self._decode_fn(
                 self.params, jnp.asarray(toks, jnp.int32)[:, None],
                 self.pool.kpool, self.pool.vpool,
@@ -153,6 +183,7 @@ class ServingEngine:
                 jnp.asarray(sids, jnp.int32), jnp.asarray(soffs, jnp.int32))
             self.pool.kpool, self.pool.vpool = kp, vp
             nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+            self._h_decode.observe(time.perf_counter() - t_step)
             for i, rid in enumerate(ids):
                 self.mgr.seqs[rid].out_tokens.append(int(nxt[i]))
             self.mgr.maintenance()
@@ -162,6 +193,12 @@ class ServingEngine:
         """What-if MRC of the KV block pool at alternative HBM budgets
         (requires ``autotune=``) — see ``BlockPool.estimate_mrc``."""
         return self.pool.estimate_mrc(capacities, **kw)
+
+    def obs_snapshot(self) -> "obs_mod.Snapshot":
+        """One merged snapshot of the whole serving stack: engine
+        latencies/queue depths + pool swaps + policy hit/flow counters
+        (+ tuner, when autotuning)."""
+        return obs_mod.merge([self.obs.snapshot(), self.pool.obs_snapshot()])
 
     @property
     def stats(self):

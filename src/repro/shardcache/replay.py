@@ -20,6 +20,7 @@ from typing import Iterable, List, Optional
 import numpy as np
 
 from repro.core.prodcache import ProdClock2QPlus
+from repro.obs import EV_SNAPSHOT
 from repro.shardcache.sharded import ShardedClock2QPlus
 
 
@@ -75,18 +76,35 @@ class ReplayReport:
 
 
 def replay_threaded(cache: ShardedClock2QPlus, trace: np.ndarray,
-                    n_threads: int = 1,
-                    batch_size: int = 1024) -> ReplayReport:
-    """Replay ``trace`` through ``cache`` with ``n_threads`` workers."""
+                    n_threads: int = 1, batch_size: int = 1024,
+                    obs=None) -> ReplayReport:
+    """Replay ``trace`` through ``cache`` with ``n_threads`` workers.
+
+    With an ``obs`` sink, each worker observes its per-batch dispatch
+    latency into a thread-labeled histogram (per-thread instruments —
+    lock-free, merged at snapshot time like per-shard registries)."""
     trace = np.asarray(trace, dtype=np.int64)
     n = trace.shape[0]
     batches = [trace[i:i + batch_size] for i in range(0, n, batch_size)]
     hit_counts = [0] * n_threads
+    # per-thread instruments, created BEFORE the workers start (family
+    # get-or-create is not thread-safe; binding is, by construction)
+    hists = [None] * n_threads
+    if obs is not None:
+        fam = obs.histogram("replay_batch_seconds", ("thread",),
+                            "access_many dispatch latency per batch")
+        hists = [fam.labels(str(t)) for t in range(n_threads)]
 
     def worker(t: int) -> None:
         total = 0
+        hist = hists[t]
         for b in range(t, len(batches), n_threads):
-            total += int(cache.access_many(batches[b]).sum())
+            if hist is None:
+                total += int(cache.access_many(batches[b]).sum())
+            else:
+                tb = time.perf_counter()
+                total += int(cache.access_many(batches[b]).sum())
+                hist.observe(time.perf_counter() - tb)
         hit_counts[t] = total
 
     t0 = time.perf_counter()
@@ -105,8 +123,8 @@ def replay_threaded(cache: ShardedClock2QPlus, trace: np.ndarray,
 
 
 def replay_store(cache: ShardedClock2QPlus, store, *, n_threads: int = 1,
-                 batch_size: int = 1024,
-                 chunk_size: int = 1 << 20) -> ReplayReport:
+                 batch_size: int = 1024, chunk_size: int = 1 << 20,
+                 obs=None) -> ReplayReport:
     """Chunked state-carry replay of an on-disk trace (``TraceStore``,
     ndarray, or any iterable of key chunks) through a sharded cache.
 
@@ -119,18 +137,35 @@ def replay_store(cache: ShardedClock2QPlus, store, *, n_threads: int = 1,
     relaxed cross-batch ordering applies exactly as in the single-shot
     path: workers race on per-shard order across batches, so hit counts
     can drift by a few per million vs serial — a property of threaded
-    replay itself, not of chunking.  Peak memory holds one chunk."""
+    replay itself, not of chunking.  Peak memory holds one chunk.
+
+    With an ``obs`` sink, the driver emits one periodic snapshot row per
+    chunk — an ``EV_SNAPSHOT`` event (accesses, hits, running miss
+    ratio) plus progress gauges — and the per-thread batch-latency
+    histograms of ``replay_threaded``, so a long stream leaves a
+    scrapeable progress trail instead of one end-of-run number."""
     from repro.traceio.store import iter_chunks
 
+    g_n = g_mr = None
+    if obs is not None:
+        g_n = obs.gauge("replay_accesses", (),
+                        "accesses replayed so far").labels()
+        g_mr = obs.gauge("replay_miss_ratio", (),
+                         "running miss ratio").labels()
     hits = 0
     n = 0
     seconds = 0.0
     for chunk in iter_chunks(store, chunk_size):
         rep = replay_threaded(cache, chunk, n_threads=n_threads,
-                              batch_size=batch_size)
+                              batch_size=batch_size, obs=obs)
         hits += rep.hits
         n += rep.n_requests
         seconds += rep.seconds
+        if obs is not None:
+            mr = 1.0 - hits / max(1, n)
+            g_n.set(float(n))
+            g_mr.set(mr)
+            obs.emit(EV_SNAPSHOT, a=n, b=hits, c=mr)
     return ReplayReport(n_threads=n_threads, n_shards=cache.n_shards,
                         n_requests=n, seconds=seconds, hits=hits)
 

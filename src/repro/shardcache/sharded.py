@@ -25,9 +25,11 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro import obs as obs_mod
 from repro.core.prodcache import (
     EMPTY, AccessResult, ProdClock2QPlus, drive_resize,
 )
+from repro.obs import EV_REBALANCE, EV_RESIZE_DONE, FLOW_KINDS
 from repro.shardcache.hashing import shard_of, shard_of_np
 
 MIN_SHARD_CAP = 2
@@ -77,7 +79,7 @@ class ShardedClock2QPlus:
                  dirty_scan_limit: int = 16, max_capacity: int = 0,
                  track_io: bool = False, rebalance_headroom: float = 2.0,
                  max_small_frac: float = 0.0, max_ghost_frac: float = 0.0,
-                 min_small_frac: float = 1.0):
+                 min_small_frac: float = 1.0, obs=None):
         if n_shards < 1:
             raise ValueError("n_shards must be >= 1")
         if capacity < n_shards * MIN_SHARD_CAP:
@@ -95,6 +97,14 @@ class ShardedClock2QPlus:
                              int(math.ceil(share * rebalance_headroom)))
         caps = apportion([1.0] * n_shards, capacity,
                          MIN_SHARD_CAP, self.shard_max)
+        # facade-level sink: cross-shard events (rebalance decisions,
+        # migration completions).  Each shard builds its OWN sink (lock-
+        # free within the shard lock) labeled shard=i; obs_snapshot()
+        # merges them all.  Passing obs=NullSink() nulls the facade AND
+        # every shard.
+        self.obs = obs_mod.ObsSink(src="shardcache") if obs is None else obs
+        mk_shard_obs = (obs_mod.NullSink if getattr(self.obs, "null", False)
+                        else obs_mod.ObsSink)
         self.shards: List[ProdClock2QPlus] = [
             ProdClock2QPlus(c, small_frac=small_frac, ghost_frac=ghost_frac,
                             window_frac=window_frac, skip_limit=skip_limit,
@@ -102,8 +112,10 @@ class ShardedClock2QPlus:
                             max_capacity=self.shard_max, track_io=track_io,
                             max_small_frac=max_small_frac,
                             max_ghost_frac=max_ghost_frac,
-                            min_small_frac=min_small_frac)
-            for c in caps]
+                            min_small_frac=min_small_frac, shard_id=i,
+                            obs=mk_shard_obs(src=f"cache/shard{i}",
+                                             labels={"shard": str(i)}))
+            for i, c in enumerate(caps)]
         self.locks = [threading.Lock() for _ in range(n_shards)]
         self.stride = self.shards[0].max_small + self.shards[0].max_main
         self._resizing: set[int] = set()
@@ -231,11 +243,22 @@ class ShardedClock2QPlus:
 
     @property
     def flows(self) -> Dict[str, int]:
-        agg: Dict[str, int] = {}
+        """Aggregate queue-transition counters.  Derived from the same
+        ``cache_flow_total`` obs family and canonical ``obs.FLOW_KINDS``
+        order as each shard's ``flows`` — the aggregate and single-shard
+        key sets are the same schema by construction."""
+        agg = {k: 0 for k in FLOW_KINDS}
         for s in self.shards:
-            for k, v in s.flows.items():
-                agg[k] = agg.get(k, 0) + v
+            for k, c in s._c_flow.items():
+                agg[k] += c.value
         return agg
+
+    def obs_snapshot(self) -> "obs_mod.Snapshot":
+        """Point-in-time merged telemetry: every shard's counters/
+        gauges/histograms under its ``shard`` label plus the facade's
+        rebalance/resize events."""
+        return obs_mod.merge([self.obs.snapshot()]
+                             + [s.obs.snapshot() for s in self.shards])
 
     @property
     def hit_ratio(self) -> float:
@@ -294,6 +317,9 @@ class ShardedClock2QPlus:
                     f"shard capacities must sum to {self.capacity}")
             for i, (s, c) in enumerate(zip(self.shards, caps)):
                 if s.capacity != c:
+                    if self.obs.ring.enabled:
+                        self.obs.emit(EV_REBALANCE, shard=i,
+                                      a=s.capacity, b=c)
                     with self.locks[i]:
                         # begin_resize finishes any pending HASH migration
                         # itself (bounded pointer work); the out-of-bounds
@@ -338,7 +364,10 @@ class ShardedClock2QPlus:
                 if finished:
                     with self._resize_lock:
                         self._resizing.discard(i)
-            if not finished:
+            if finished:
+                if self.obs.ring.enabled:
+                    self.obs.emit(EV_RESIZE_DONE, shard=i)
+            else:
                 done = False
         return done
 

@@ -28,7 +28,9 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
+from repro import obs as obs_mod
 from repro.core.engine import _FRAC_KNOBS, get_engine
+from repro.obs import EV_RETUNE
 from repro.core.prodcache import drive_resize
 from repro.tuning import profiler
 from repro.tuning.sweep import SweepConfig, sweep_grid
@@ -59,7 +61,7 @@ class OnlineTuner:
                  rate_shift: int = 6, min_samples: int = 1024,
                  min_scaled_cap: int = 64, min_gain: float = 0.005,
                  confirm_rounds: int = 2, drive_steps: int = 256,
-                 max_decisions: int = 256):
+                 max_decisions: int = 256, obs=None):
         self.cache = cache
         # which lane engine simulates this cache: explicit policy= wins,
         # else the cache declares it (engine_policy), else clock2q+
@@ -93,6 +95,23 @@ class OnlineTuner:
         # decision retains its candidate grid + estimate arrays
         self.decisions: collections.deque = collections.deque(
             maxlen=max_decisions)
+        # telemetry: profiling rounds / applied retunes as counters, the
+        # sampled-MRC estimate of every grid point as a gauge family
+        # (the profiler's what-if surface, scrapeable per round), and an
+        # EV_RETUNE event per applied decision
+        self.obs = obs_mod.ObsSink(src="tuner") if obs is None else obs
+        self._c_rounds = self.obs.counter(
+            "tuner_rounds_total", (), "profiling rounds run").labels()
+        self._c_retunes = self.obs.counter(
+            "tuner_retunes_total", (), "retunes applied to the live "
+            "cache").labels()
+        self._g_est = self.obs.gauge(
+            "tuner_est_miss_ratio",
+            ("window_frac", "small_frac", "ghost_frac"),
+            "sampled-MRC estimate per candidate config (last round)")
+        self._g_live = self.obs.gauge(
+            "tuner_live_est_miss_ratio", (), "sampled-MRC estimate of "
+            "the live config (last round)").labels()
 
     # -- observation -----------------------------------------------------------
     def observe(self, key: int) -> Optional[TuneDecision]:
@@ -252,6 +271,12 @@ class OnlineTuner:
         live_mr = est[grid.index(live)]
         best_i = int(np.nanargmin(est))
         chosen = grid[best_i]
+        self._c_rounds.value += 1
+        for cfg, e in zip(grid, est):
+            self._g_est.labels(f"{cfg.window_frac:g}",
+                               f"{cfg.small_frac:g}",
+                               f"{cfg.ghost_frac:g}").set(float(e))
+        self._g_live.set(float(live_mr))
         wins = (chosen != live
                 and live_mr - est[best_i] >= self.min_gain)
         if wins:
@@ -267,6 +292,13 @@ class OnlineTuner:
                                  if k in self.engine.knobs})
             if hasattr(self.cache, "resize_step"):
                 drive_resize(self.cache, self.drive_steps)
+            self._c_retunes.value += 1
+            # window fracs as per-mille ints (event a/b are int64),
+            # estimated gain in c
+            self.obs.emit(EV_RETUNE,
+                          a=int(round(1000 * live.window_frac)),
+                          b=int(round(1000 * chosen.window_frac)),
+                          c=float(live_mr - est[best_i]))
         d = TuneDecision(self.n_observed, grid, est, n_sampled, shift,
                          chosen, applied)
         self.decisions.append(d)

@@ -18,7 +18,22 @@ def test_no_upward_module_level_imports():
 
 def test_layer_of_longest_prefix_wins():
     assert check_layering.layer_of("repro.core.engine.layout") == 0
+    assert check_layering.layer_of("repro.obs.metrics") == 0
     assert check_layering.layer_of("repro.core.jax_engine") == 1
     assert check_layering.layer_of("repro.tuning.sweep") == 3
     assert check_layering.layer_of("repro.serving.engine") == 4
     assert check_layering.layer_of("repro.models.model") is None
+
+
+def test_obs_is_sealed():
+    # obs is instrumented by every layer, so it must not import any
+    # layered package itself — not even sideways at layer 0
+    assert check_layering._sealed_prefix("repro.obs.events") == "repro.obs"
+    assert check_layering._sealed_prefix("repro.core.engine") is None
+    import ast
+    import re
+    for path in sorted((REPO / "src" / "repro" / "obs").glob("*.py")):
+        tree = ast.parse(path.read_text())
+        for _, imported in check_layering.module_level_imports(tree):
+            assert not re.match(r"repro\.(?!obs)", imported + "."), \
+                f"{path} imports {imported}"

@@ -1,0 +1,406 @@
+"""Observability subsystem: instruments, snapshot algebra, export
+formats, the ring trace, and the wiring through the cache stack.
+
+The load-bearing guarantee is EXACT mergeability: per-shard registries
+are lock-free because nothing aggregates on the access path, so the
+merged snapshot must equal the sum of per-shard deltas bit-for-bit —
+asserted here under a real 4-thread sharded replay.
+"""
+
+import json
+import pathlib
+import sys
+
+import numpy as np
+import pytest
+
+from repro.obs import (
+    EV_EVICT, EV_RETUNE, EV_SNAPSHOT, EVENT_NAMES, FLOW_KINDS, EventRing,
+    NullRing, NullSink, ObsSink, Snapshot, delta, merge, snapshot,
+    to_prometheus,
+)
+from repro.obs.metrics import (
+    Counter, Gauge, Histogram, Registry, parse_sample_key, sample_key,
+)
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "tools"))
+
+
+def zipf_trace(n=4000, universe=256, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.zipf(1.2, size=n).astype(np.int64) % universe
+
+
+# -- instruments ---------------------------------------------------------------
+
+def test_counter_gauge_basics():
+    c = Counter()
+    c.value += 3
+    c.inc(2)
+    assert c.sample() == 5
+    g = Gauge()
+    g.set(2.5)
+    g.inc()
+    g.dec(0.5)
+    assert g.sample() == 3.0
+
+
+def test_histogram_log2_bucketing():
+    h = Histogram(base=1.0, n_buckets=6)
+    # bucket 0: v < 1; bucket i: 2**(i-1) <= v < 2**i; top = catch-all
+    for v, want in [(0.5, 0), (1.0, 1), (1.9, 1), (2.0, 2), (3.9, 2),
+                    (4.0, 3), (1e9, 5)]:
+        before = h.counts.copy()
+        h.observe(v)
+        (changed,) = np.nonzero(h.counts - before)
+        assert changed[0] == want, (v, want, changed)
+    assert h.count == 7
+    assert h.bounds()[-1] == float("inf")
+    assert h.bounds()[:3] == [1.0, 2.0, 4.0]
+    assert np.isnan(Histogram().quantile(0.5))
+
+
+def test_histogram_quantile_monotone():
+    h = Histogram(base=1e-3, n_buckets=16)
+    for v in [0.001, 0.002, 0.004, 0.008, 0.1, 0.1, 0.1, 2.0]:
+        h.observe(v)
+    qs = [h.quantile(q) for q in (0.1, 0.5, 0.9, 1.0)]
+    assert qs == sorted(qs)
+
+
+def test_sample_key_round_trip():
+    for name, labels in [("x_total", {}),
+                         ("hits", {"shard": "3", "queue": "small"}),
+                         ("a", {"b": "c d", "e": "1"})]:
+        key = sample_key(name, labels)
+        assert parse_sample_key(key) == (name, labels)
+    # label names are sorted -> one canonical identity per series
+    assert sample_key("n", {"b": "2", "a": "1"}) == 'n{a="1",b="2"}'
+
+
+def test_registry_conflicts_and_base_labels():
+    reg = Registry({"shard": "7"})
+    fam = reg.counter("hits_total", ("queue",))
+    fam.labels("small").value += 2
+    fam.labels("main").value += 1
+    with pytest.raises(ValueError):
+        reg.gauge("hits_total")  # kind conflict
+    with pytest.raises(ValueError):
+        reg.counter("hits_total", ("other",))  # labelnames conflict
+    with pytest.raises(ValueError):
+        fam.labels()  # arity
+    got = {k: v for _, _, k, v in reg.samples()}
+    assert got == {'hits_total{queue="small",shard="7"}': 2,
+                   'hits_total{queue="main",shard="7"}': 1}
+
+
+def test_on_collect_runs_before_snapshot():
+    sink = ObsSink(src="t")
+    g = sink.gauge("occupancy", ()).labels()
+    state = {"n": 41}
+    sink.on_collect(lambda: g.set(float(state["n"])))
+    state["n"] = 42
+    assert sink.snapshot().gauges["occupancy"] == 42.0
+
+
+# -- event ring ----------------------------------------------------------------
+
+def test_ring_wraparound_and_sequence():
+    ring = EventRing(capacity=8, src="r")
+    for i in range(20):
+        ring.emit(EV_EVICT, shard=i % 3, a=i, b=i * 2, c=i / 2)
+    assert ring.n == 20
+    assert ring.dropped == 12
+    recs = ring.records()
+    assert len(recs) == 8
+    assert [r["seq"] for r in recs] == list(range(12, 20))  # oldest first
+    assert recs[0] == dict(seq=12, src="r", kind="evict", shard=0,
+                           a=12, b=24, c=6.0)
+
+
+def test_null_ring_is_inert():
+    ring = NullRing(src="r")
+    ring.emit(EV_EVICT, a=1)
+    assert not ring.enabled
+    assert ring.records() == [] and ring.dropped == 0 and ring.n == 0
+
+
+# -- snapshot algebra + export -------------------------------------------------
+
+def one_sink(src, shard, hits, evicts):
+    sink = ObsSink(src=src, labels={"shard": str(shard)})
+    sink.counter("hits_total", ()).labels().value += hits
+    h = sink.histogram("lat_seconds", ()).labels()
+    for v in [1e-6] * hits:
+        h.observe(v)
+    for i in range(evicts):
+        sink.emit(EV_EVICT, shard=shard, a=i)
+    sink.gauge("cap", ()).labels().set(100.0 + shard)
+    return sink
+
+
+def test_snapshot_json_round_trip():
+    snap = one_sink("a", 0, 5, 3).snapshot(ts=1.5)
+    back = Snapshot.from_json(snap.to_json())
+    assert back == snap
+    # inf bucket bound survives JSON (json emits Infinity)
+    assert back.hists['lat_seconds{shard="0"}']["le"][-1] == float("inf")
+
+
+def test_merge_adds_counters_and_hists_keeps_events():
+    s0 = one_sink("a", 0, 5, 2).snapshot(ts=1.0)
+    s1 = one_sink("b", 1, 7, 1).snapshot(ts=2.0)
+    m = merge([s0, s1])
+    assert m.ts == 2.0
+    assert m.counters['hits_total{shard="0"}'] == 5
+    assert m.counters['hits_total{shard="1"}'] == 7
+    assert m.hists['lat_seconds{shard="0"}']["count"] == 5
+    assert len(m.events) == 3
+    assert m.gauges['cap{shard="1"}'] == 101.0
+    # same-key merge: counters add
+    m2 = merge([s0, one_sink("a", 0, 3, 0).snapshot(ts=3.0)])
+    assert m2.counters['hits_total{shard="0"}'] == 8
+    assert m2.hists['lat_seconds{shard="0"}']["count"] == 8
+
+
+def test_delta_subtracts_and_filters_events():
+    sink = one_sink("a", 0, 5, 2)
+    s0 = sink.snapshot(ts=1.0)
+    sink.registry.families["hits_total"].labels().value += 4
+    sink.emit(EV_EVICT, shard=0, a=99)
+    s1 = sink.snapshot(ts=2.0)
+    d = delta(s0, s1)
+    assert d.counters['hits_total{shard="0"}'] == 4
+    assert [e["a"] for e in d.events] == [99]
+    assert d.dropped_events == 0
+    # delta then re-add: round-trips to the newer snapshot
+    back = merge([s0, d])
+    assert back.counters == s1.counters
+    assert back.hists == s1.hists
+
+
+def test_prometheus_exposition():
+    snap = one_sink("a", 0, 3, 1).snapshot(ts=1.0)
+    text = to_prometheus(snap)
+    assert "# TYPE hits_total counter" in text
+    assert '\nhits_total{shard="0"} 3\n' in text
+    assert "# TYPE lat_seconds histogram" in text
+    assert 'le="+Inf"' in text
+    assert 'lat_seconds_count{shard="0"} 3' in text
+    # buckets are cumulative: the +Inf bucket equals _count
+    lines = [ln for ln in text.splitlines() if ln.startswith(
+        "lat_seconds_bucket")]
+    assert lines[-1].endswith(" 3")
+
+
+def test_null_sink_counts_but_exports_nothing():
+    sink = NullSink(src="n")
+    c = sink.counter("hits_total", ()).labels()
+    c.value += 7
+    sink.emit(EV_EVICT, a=1)
+    assert sink.null and not sink.ring.enabled
+    assert c.value == 7  # instruments back the semantic stats surfaces
+    snap = sink.snapshot()
+    assert snap.counters == {} and snap.events == []
+    assert snap.meta["null"] == "1"
+
+
+# -- property tests (hypothesis where available) --------------------------------
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(st.integers(0, 10_000), max_size=200),
+           st.integers(1, 32))
+    def test_ring_retains_last_capacity(seqs, cap):
+        ring = EventRing(capacity=cap, src="p")
+        for a in seqs:
+            ring.emit(EV_SNAPSHOT, a=a)
+        recs = ring.records()
+        assert [r["a"] for r in recs] == seqs[-cap:] if seqs else recs == []
+        assert ring.dropped == max(0, len(seqs) - cap)
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(st.floats(1e-9, 1e3), max_size=100))
+    def test_hist_merge_equals_single(vals):
+        h1, h2, both = Histogram(), Histogram(), Histogram()
+        for i, v in enumerate(vals):
+            (h1 if i % 2 else h2).observe(v)
+            both.observe(v)
+        s = snapshot([])
+        from repro.obs.export import _hist_add
+        _hist_add(s.hists, "h", h1.sample())
+        _hist_add(s.hists, "h", h2.sample())
+        assert s.hists["h"]["counts"] == both.sample()["counts"]
+        assert s.hists["h"]["count"] == both.count
+except ImportError:  # pragma: no cover - hypothesis is optional
+    pass
+
+
+# -- wiring through the cache stack --------------------------------------------
+
+def test_prod_cache_instrumented_vs_null_identical():
+    from repro.core.prodcache import ProdClock2QPlus
+
+    trace = zipf_trace()
+    live = ProdClock2QPlus(64)
+    nulled = ProdClock2QPlus(64, obs=NullSink(src="n"))
+    for k in trace.tolist():
+        live.access(k)
+        nulled.access(k)
+    assert live.hits == nulled.hits and live.misses == nulled.misses
+    assert live.flows == nulled.flows
+    assert set(live.flows) == set(FLOW_KINDS)
+    assert live.hits + live.misses == trace.size
+    snap = live.obs.snapshot()
+    assert snap.counters['cache_misses_total{shard="0"}'] == live.misses
+    hit_sum = sum(v for k, v in snap.counters.items()
+                  if k.startswith("cache_hits_total"))
+    assert hit_sum == live.hits
+    kinds = {e["kind"] for e in snap.events}
+    assert "evict" in kinds and "window_enter" in kinds
+    assert snap.gauges['cache_capacity{segment="total",shard="0"}'] == 64
+    assert nulled.obs.snapshot().counters == {}
+
+
+def test_flow_keys_match_between_prod_and_sharded():
+    from repro.core.prodcache import ProdClock2QPlus
+    from repro.shardcache import ShardedClock2QPlus
+
+    trace = zipf_trace(n=2000)
+    prod = ProdClock2QPlus(64)
+    shard = ShardedClock2QPlus(64, n_shards=4)
+    for k in trace.tolist():
+        prod.access(k)
+        shard.access(k)
+    # satellite: one schema — identical key sets from the same counter
+    # families, and every key is a canonical FLOW_KINDS member
+    assert set(prod.flows) == set(shard.flows) == set(FLOW_KINDS)
+    assert sum(shard.flows.values()) > 0
+
+
+def test_sharded_merge_equals_sum_of_shard_deltas():
+    """4-thread replay: the merged snapshot must equal the sum of
+    per-shard deltas EXACTLY (lock-free-within-shard counting loses
+    nothing; counters/histogram buckets add)."""
+    from repro.shardcache import ShardedClock2QPlus
+    from repro.shardcache.replay import replay_threaded
+
+    cache = ShardedClock2QPlus(128, n_shards=4)
+    sinks = [s.obs for s in cache.shards]
+    befores = [s.snapshot(ts=0.0) for s in sinks]
+    rep = replay_threaded(cache, zipf_trace(n=8000), n_threads=4,
+                          batch_size=256, obs=cache.obs)
+    afters = [s.snapshot(ts=1.0) for s in sinks]
+    deltas = [delta(b, a) for b, a in zip(befores, afters)]
+    summed = merge(deltas)
+    merged = merge(afters)  # fresh cache: snapshot == delta-from-zero
+    assert summed.counters == merged.counters
+    assert summed.hists == merged.hists
+    # and the counters agree with the replay's ground truth
+    hit_sum = sum(v for k, v in merged.counters.items()
+                  if k.startswith("cache_hits_total"))
+    miss_sum = sum(v for k, v in merged.counters.items()
+                   if k.startswith("cache_misses_total"))
+    assert hit_sum == rep.hits
+    assert hit_sum + miss_sum == rep.n_requests
+    # per-shard series are disjoint labeled keys
+    shards_seen = {parse_sample_key(k)[1]["shard"]
+                   for k in merged.counters if "shard=" in k}
+    assert shards_seen == {"0", "1", "2", "3"}
+    # full-stack snapshot renders to Prometheus without error
+    full = cache.obs_snapshot()
+    assert "cache_hits_total" in to_prometheus(full)
+    assert any(h["count"] > 0 for h in full.hists.values())
+
+
+def test_sharded_rebalance_and_resize_events():
+    from repro.shardcache import ShardedClock2QPlus
+
+    cache = ShardedClock2QPlus(64, n_shards=2, max_capacity=128)
+    for k in zipf_trace(n=500).tolist():
+        cache.access(k)
+    caps = [s.capacity for s in cache.shards]
+    cache.set_shard_capacities([caps[0] + 8, caps[1] - 8])
+    while not cache.rebalance_step(64):
+        pass
+    ev = cache.obs_snapshot().events
+    kinds = {e["kind"] for e in ev}
+    assert "rebalance" in kinds and "resize_done" in kinds
+    reb = [e for e in ev if e["kind"] == "rebalance"]
+    assert {(e["a"], e["b"]) for e in reb} == \
+        {(caps[0], caps[0] + 8), (caps[1], caps[1] - 8)}
+
+
+def test_tuner_emits_rounds_gauges_and_retune_events():
+    from repro.core.prodcache import ProdClock2QPlus
+    from repro.tuning import OnlineTuner
+
+    cache = ProdClock2QPlus(64, max_small_frac=0.9, min_small_frac=0.05)
+    sink = ObsSink(src="tuner")
+    tuner = OnlineTuner(cache, retune_every=512, window_fracs=(0.1, 1.0),
+                        min_gain=-1.0, confirm_rounds=1, obs=sink)
+    trace = zipf_trace(n=1100, universe=512)
+    for k in trace.tolist():
+        cache.access(k)
+        tuner.observe(int(k))
+    snap = sink.snapshot()
+    rounds = snap.counters["tuner_rounds_total"]
+    assert rounds == 2
+    est_keys = [k for k in snap.gauges
+                if k.startswith("tuner_est_miss_ratio")]
+    assert len(est_keys) >= 2  # one gauge per candidate config
+    assert all(0.0 <= snap.gauges[k] <= 1.0 for k in est_keys)
+    assert "tuner_live_est_miss_ratio" in snap.gauges
+    # min_gain=-1 forces retunes: counter and EV_RETUNE event agree
+    retunes = snap.counters["tuner_retunes_total"]
+    ev = [e for e in snap.events if e["kind"] == EVENT_NAMES[EV_RETUNE]]
+    assert retunes == len(ev) >= 1
+    assert all(0 <= e["a"] <= 1000 and 0 <= e["b"] <= 1000 for e in ev)
+
+
+def test_replay_store_snapshot_rows():
+    from repro.shardcache import ShardedClock2QPlus
+    from repro.shardcache.replay import replay_store
+
+    sink = ObsSink(src="replay")
+    cache = ShardedClock2QPlus(64, n_shards=2)
+    trace = zipf_trace(n=3000)
+    rep = replay_store(cache, trace, chunk_size=1000, obs=sink)
+    snap = sink.snapshot()
+    rows = [e for e in snap.events if e["kind"] == "snapshot"]
+    assert [e["a"] for e in rows] == [1000, 2000, 3000]
+    assert rows[-1]["b"] == rep.hits
+    assert snap.gauges["replay_accesses"] == 3000.0
+    assert snap.gauges["replay_miss_ratio"] == pytest.approx(
+        rep.miss_ratio)
+
+
+# -- obsreport CLI -------------------------------------------------------------
+
+def test_obsreport_renders_snapshot_and_delta(tmp_path, capsys):
+    import obsreport
+
+    sink = one_sink("a", 0, 5, 3)
+    p0 = tmp_path / "s0.json"
+    p0.write_text(sink.snapshot(ts=1.0).to_json())
+    sink.registry.families["hits_total"].labels().value += 2
+    sink.emit(EV_EVICT, shard=0, a=77)
+    p1 = tmp_path / "s1.json"
+    p1.write_text(sink.snapshot(ts=2.0).to_json())
+
+    assert obsreport.main([str(p0)]) == 0
+    out = capsys.readouterr().out
+    assert "hits_total" in out and "lat_seconds" in out and "evict" in out
+
+    assert obsreport.main([str(p0), str(p1), "--events", "5"]) == 0
+    out = capsys.readouterr().out
+    assert "(delta)" in out and "a=77" in out
+    assert " 2" in out  # the counter delta
+
+    assert obsreport.main([str(p1), "--prom"]) == 0
+    out = capsys.readouterr().out
+    assert "# TYPE hits_total counter" in out

@@ -76,6 +76,20 @@ def test_eviction_under_pressure_swaps_to_host(small_model):
     assert stats.swap_out > 0          # dirty blocks were flushed/evicted
     assert flows["small_to_ghost"] + flows["evict_main"] \
         + flows["small_bypass"] > 0
+    # the merged stack snapshot carries engine + pool + policy telemetry
+    snap = eng.obs_snapshot()
+    assert snap.counters["serve_requests_total"] == 6
+    assert snap.counters['pool_swaps_total{dir="out"}'] == stats.swap_out
+    assert snap.counters['pool_lookups_total{result="hit"}'] == stats.hits
+    assert snap.hists["serve_request_latency_seconds"]["count"] == 6
+    assert snap.hists["serve_decode_step_seconds"]["count"] > 0
+    assert snap.gauges['serve_queue_depth{stage="active"}'] == 0.0
+    assert sum(v for k, v in snap.counters.items()
+               if k.startswith("cache_flow_total")) \
+        == sum(flows.values())
+    assert {e["kind"] for e in snap.events} >= {"evict", "window_enter"}
+    from repro.obs import to_prometheus
+    assert "serve_request_latency_seconds_bucket" in to_prometheus(snap)
 
 
 def test_live_pool_resize(small_model):

@@ -5,6 +5,9 @@ Enforced order (lower number = lower layer; module-level imports may
 only point DOWNWARD or sideways within a package, never upward):
 
     0  repro.core.engine     the capacity-masked policy core
+    0  repro.obs             metrics/event telemetry (SEALED: imports
+                             no other layered package, not even layer 0
+                             — every layer instruments, none leaks back)
     1  repro.core            reference zoo, prod cache, replay drivers
     2  repro.traceio         trace storage/streaming
     3  repro.tuning, repro.shardcache, repro.kvcache, repro.kernels
@@ -32,6 +35,7 @@ import sys
 # repro.core layer 1
 LAYERS = {
     "repro.core.engine": 0,
+    "repro.obs": 0,
     "repro.core": 1,
     "repro.traceio": 2,
     "repro.tuning": 3,
@@ -40,6 +44,18 @@ LAYERS = {
     "repro.kernels": 3,
     "repro.serving": 4,
 }
+
+# sealed packages may not import ANY other layered package, sideways
+# included: obs is instrumented BY every layer, so an obs -> cache
+# import would be a cycle waiting to happen
+SEALED = {"repro.obs"}
+
+
+def _sealed_prefix(module: str) -> str | None:
+    for prefix in SEALED:
+        if module == prefix or module.startswith(prefix + "."):
+            return prefix
+    return None
 
 
 def layer_of(module: str) -> int | None:
@@ -91,9 +107,16 @@ def check(src: pathlib.Path):
         if mod_layer is None:
             continue
         tree = ast.parse(path.read_text(), filename=str(path))
+        sealed = _sealed_prefix(mod)
         for lineno, imported in module_level_imports(tree):
             imp_layer = layer_of(imported)
-            if imp_layer is not None and imp_layer > mod_layer:
+            if imp_layer is None:
+                continue
+            if sealed and _sealed_prefix(imported) != sealed:
+                violations.append(
+                    f"{path}:{lineno}: {mod} (sealed) imports layered "
+                    f"package {imported}")
+            elif imp_layer > mod_layer:
                 violations.append(
                     f"{path}:{lineno}: {mod} (layer {mod_layer}) imports "
                     f"{imported} (layer {imp_layer}) at module level")

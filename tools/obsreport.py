@@ -1,0 +1,137 @@
+#!/usr/bin/env python
+"""Render an obs JSON snapshot (or the delta of two) as a readable report.
+
+    PYTHONPATH=src python tools/obsreport.py SNAP.json
+    PYTHONPATH=src python tools/obsreport.py OLD.json NEW.json   # delta
+    ... --events 40        # show up to N trailing events (default 20)
+    ... --prom             # emit Prometheus text instead of the report
+
+Snapshots come from ``ObsSink.snapshot().to_json()`` anywhere in the
+stack (``ProdClock2QPlus.obs``, ``ShardedClock2QPlus.obs_snapshot()``,
+``BlockPool.obs_snapshot()``, ``ServingEngine.obs_snapshot()``) — the CI
+bench job uploads one as ``experiments/obs_snapshot.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+from collections import defaultdict
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
+                       / "src"))
+
+from repro.obs import Snapshot, delta, to_prometheus  # noqa: E402
+from repro.obs.metrics import parse_sample_key  # noqa: E402
+
+
+def load(path: str) -> Snapshot:
+    return Snapshot.from_json(pathlib.Path(path).read_text())
+
+
+def _label_str(labels: dict) -> str:
+    return ",".join(f"{k}={v}" for k, v in sorted(labels.items()))
+
+
+def render(snap: Snapshot, n_events: int = 20) -> str:
+    out = []
+    title = "obs snapshot" + (" (delta)" if snap.meta.get("delta") else "")
+    out.append(f"== {title} @ ts={snap.ts:.3f} ==")
+    if snap.meta:
+        out.append("meta: " + _label_str(snap.meta))
+
+    if snap.counters:
+        out.append("\n-- counters --")
+        by_name = defaultdict(list)
+        for key, v in snap.counters.items():
+            name, labels = parse_sample_key(key)
+            by_name[name].append((_label_str(labels), v))
+        for name in sorted(by_name):
+            rows = sorted(by_name[name])
+            total = sum(v for _, v in rows)
+            out.append(f"{name}  (total {total})")
+            for lbl, v in rows:
+                out.append(f"    {lbl or '-':<48} {v}")
+
+    if snap.gauges:
+        out.append("\n-- gauges --")
+        for key in sorted(snap.gauges):
+            out.append(f"    {key:<52} {snap.gauges[key]:g}")
+
+    if snap.hists:
+        out.append("\n-- histograms --")
+        for key in sorted(snap.hists):
+            h = snap.hists[key]
+            count = h["count"]
+            out.append(f"{key}: count={count} sum={h['sum']:.6g}")
+            if count > 0:
+                mean = h["sum"] / count
+                qs = {q: _quantile(h, q) for q in (0.5, 0.9, 0.99)}
+                out.append(
+                    f"    mean={mean:.3e}  p50<={qs[0.5]:.3e}  "
+                    f"p90<={qs[0.9]:.3e}  p99<={qs[0.99]:.3e}")
+                out.append("    " + _sparkline(h))
+
+    if snap.events:
+        out.append(f"\n-- events (last {min(n_events, len(snap.events))} "
+                   f"of {len(snap.events)} retained, "
+                   f"{snap.dropped_events} wrapped away) --")
+        for e in snap.events[-n_events:]:
+            out.append(f"    [{e['src']}:{e['seq']}] {e['kind']:<14} "
+                       f"shard={e['shard']} a={e['a']} b={e['b']} "
+                       f"c={e['c']:g}")
+    return "\n".join(out) + "\n"
+
+
+def _quantile(h: dict, q: float) -> float:
+    total = h["count"]
+    run = 0
+    finite = [b for b in h["le"] if b != float("inf")]
+    for le, c in zip(h["le"], h["counts"]):
+        run += c
+        if run >= q * total:
+            return le if le != float("inf") else finite[-1]
+    return finite[-1] if finite else float("nan")
+
+
+def _sparkline(h: dict, width: int = 40) -> str:
+    counts = h["counts"]
+    # trim empty head/tail buckets for a readable strip
+    nz = [i for i, c in enumerate(counts) if c]
+    if not nz:
+        return ""
+    lo, hi = nz[0], nz[-1] + 1
+    blocks = " .:-=+*#%@"
+    peak = max(counts[lo:hi])
+    strip = "".join(
+        blocks[min(len(blocks) - 1,
+                   int(round((len(blocks) - 1) * c / peak)))]
+        for c in counts[lo:hi])
+    return f"buckets[{lo}:{hi}] |{strip[:width]}|"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("snapshot", help="obs snapshot JSON file")
+    ap.add_argument("newer", nargs="?", default=None,
+                    help="second snapshot: report the delta old -> new")
+    ap.add_argument("--events", type=int, default=20,
+                    help="max trailing events to show (default 20)")
+    ap.add_argument("--prom", action="store_true",
+                    help="emit Prometheus text exposition instead")
+    args = ap.parse_args(argv)
+
+    snap = load(args.snapshot)
+    if args.newer:
+        snap = delta(snap, load(args.newer))
+        snap.meta["delta"] = "1"
+    if args.prom:
+        sys.stdout.write(to_prometheus(snap))
+    else:
+        sys.stdout.write(render(snap, args.events))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

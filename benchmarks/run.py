@@ -14,7 +14,7 @@ import sys
 import time
 from pathlib import Path
 
-from benchmarks import paper_figs, perf, scenarios, shard, tuning
+from benchmarks import faults, paper_figs, perf, scenarios, shard, tuning
 
 BENCHES = [
     ("fig7", paper_figs.fig7_fidelity),
@@ -33,6 +33,7 @@ BENCHES = [
     ("fig_tuner", tuning.fig_tuner_converge),
     ("perf_cpu", perf.perf_cpu_overhead),
     ("perf_obs", perf.perf_obs_overhead),
+    ("perf_faults", faults.perf_fault_overhead),
     ("perf_sweep_grid", tuning.perf_sweep_grid),
     ("perf_shard_scalability", shard.perf_shard_scalability),
     ("perf_engine", perf.perf_jax_engine),

@@ -4,10 +4,14 @@ Shows the full substrate in one script: config -> model -> data pipeline
 (with its Clock2Q+-managed shard-index cache) -> train steps -> checkpoint
 -> restore.
 
-    PYTHONPATH=src python examples/quickstart.py [--steps 20]
+    PYTHONPATH=src python examples/quickstart.py [--steps 20] [--smoke]
+
+``--smoke`` shrinks it to the few-second version CI runs on every push
+(3 steps, tiny batch) — same code path, just less of it.
 """
 
 import argparse
+import tempfile
 import time
 
 import jax
@@ -24,7 +28,11 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=20)
     ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke mode: 3 steps, batch 2, temp ckpt dir")
     args = ap.parse_args()
+    if args.smoke:
+        args.steps = min(args.steps, 3)
 
     cfg = reduced(get_config(args.arch))
     print(f"arch={cfg.name} params={cfg.n_params():,} (reduced config)")
@@ -34,8 +42,11 @@ def main():
     step = jax.jit(step_lib.make_train_step(
         api, step_lib.RunConfig(adamw=oc)))
     pipe = TokenPipeline(DataConfig(vocab=cfg.vocab, seq_len=64,
-                                    global_batch=8, seed=0))
-    mgr = CheckpointManager("/tmp/repro_quickstart_ckpt")
+                                    global_batch=2 if args.smoke else 8,
+                                    seed=0))
+    ckpt_dir = (tempfile.mkdtemp(prefix="repro_quickstart_") if args.smoke
+                else "/tmp/repro_quickstart_ckpt")
+    mgr = CheckpointManager(ckpt_dir)
 
     t0 = time.time()
     for i in range(args.steps):

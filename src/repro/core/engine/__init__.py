@@ -75,18 +75,23 @@ class PolicyEngine:
 
     # -- replay ---------------------------------------------------------------
     def step(self, state: Dict, key) -> Tuple[Dict, jnp.ndarray]:
+        """One masked transition: ``(state, key) -> (state, hit)``."""
         return self.step_fn(state, key)
 
     def replay(self, state: Dict, trace) -> Tuple[Dict, jnp.ndarray]:
+        """Jitted ``lax.scan`` replay of ``trace`` from ``state``."""
         return replay(self.name, state, trace)
 
     def replay_chunked(self, chunks, capacity: int, universe: int,
                        state: Optional[Dict] = None, **kw):
+        """State-carry replay over an iterable of trace chunks
+        (bit-identical to the single-shot ``replay``)."""
         return replay_chunked(self.name, chunks, capacity, universe,
                               state=state, **kw)
 
     def lane_hits(self, trace, config: Optional[SweepConfig] = None,
                   universe: Optional[int] = None, **kw) -> np.ndarray:
+        """Per-access hit array for one configuration (one vmap lane)."""
         if config is None:
             config = self.config(**kw)
         return lane_hits(trace, config, universe)
@@ -104,6 +109,7 @@ def register_engine(engine: PolicyEngine) -> PolicyEngine:
 
 
 def get_engine(name: str) -> PolicyEngine:
+    """Look up a registered lane engine by policy name."""
     try:
         return _REGISTRY[name]
     except KeyError:
@@ -113,6 +119,7 @@ def get_engine(name: str) -> PolicyEngine:
 
 
 def engine_names() -> List[str]:
+    """Sorted names of every registered lane engine."""
     return sorted(_REGISTRY)
 
 
@@ -259,6 +266,7 @@ def grid_hit_counts(policy: str, states: Dict,
 @functools.partial(jax.jit, static_argnames=("policy",))
 def grid_hit_arrays(policy: str, states: Dict,
                     trace: jnp.ndarray) -> jnp.ndarray:
+    """Per-access hit arrays for every lane (lanes x T on device)."""
     step = get_engine(policy).step_fn
 
     def lane(st):

@@ -73,6 +73,7 @@ def init(cfg: SweepConfig, universe: int,
 
 
 def step(st: Dict, key: jnp.ndarray) -> Tuple[Dict, jnp.ndarray]:
+    """One Clock2Q+ transition: ``(state, key) -> (state, hit)``."""
     # key < 0 is a padding sentinel: every case mask goes False, so the
     # step is a no-op and the (non-)hit never counts.  Lets callers pad
     # traces to a bucketed length and reuse the compiled sweep.

@@ -47,6 +47,7 @@ class EngineCache:
     # -- identity / tuning surface (what OnlineTuner consumes) -----------------
     @property
     def capacity(self) -> int:
+        """Current logical capacity (live-retunable)."""
         return self.config.capacity
 
     @property
@@ -83,6 +84,7 @@ class EngineCache:
 
     @property
     def miss_ratio(self) -> float:
+        """Lifetime miss ratio (1.0 before any access)."""
         n = self.hits + self.misses
         return 1.0 if n == 0 else self.misses / n
 

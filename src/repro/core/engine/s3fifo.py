@@ -37,11 +37,13 @@ _BIG = 2**30  # above any reachable walk position; far from int32 overflow
 
 
 def sizes(cfg: SweepConfig) -> Tuple[int, int, int]:
+    """Physical (small, main, ghost) ring sizes for ``cfg``."""
     return sq_sizes(cfg.capacity, cfg.small_frac, cfg.ghost_frac)
 
 
 def init(cfg: SweepConfig, universe: int,
          phys: Optional[Tuple[int, int, int]] = None) -> Dict:
+    """Masked S3-FIFO state (``phys`` pads the rings to grid maxima)."""
     S, M, G = sizes(cfg)
     pS, pM, pG = phys if phys is not None else (S, M, G)
     return dict(
@@ -60,6 +62,7 @@ def init(cfg: SweepConfig, universe: int,
 
 
 def step(st: Dict, key) -> Tuple[Dict, jnp.ndarray]:
+    """One S3-FIFO transition: ``(state, key) -> (state, hit)``."""
     active = key >= 0  # key < 0: padding sentinel, whole step is a no-op
     key = jnp.maximum(key, 0)
     where = st["loc_w"][key]

@@ -24,6 +24,7 @@ _I32_MAX = 2**31 - 1
 
 
 def sizes(cfg: SweepConfig) -> Tuple[int]:
+    """Physical array sizes for a simple single-ring policy."""
     return (max(1, cfg.capacity),)
 
 
@@ -31,6 +32,7 @@ def sizes(cfg: SweepConfig) -> Tuple[int]:
 
 def fifo_init(cfg: SweepConfig, universe: int,
               phys: Optional[Tuple[int]] = None) -> Dict:
+    """Masked FIFO state (``phys`` pads the ring to grid maxima)."""
     (C,) = sizes(cfg)
     (pC,) = phys if phys is not None else (C,)
     return dict(keys=jnp.full((pC,), EMPTY), pos=jnp.int32(0),
@@ -39,6 +41,7 @@ def fifo_init(cfg: SweepConfig, universe: int,
 
 
 def fifo_step(st: Dict, key) -> Tuple[Dict, jnp.ndarray]:
+    """One FIFO transition: ``(state, key) -> (state, hit)``."""
     active = key >= 0
     key = jnp.maximum(key, 0)
     hit = active & st["resident"][key]
@@ -56,6 +59,7 @@ def fifo_step(st: Dict, key) -> Tuple[Dict, jnp.ndarray]:
 
 def clock_init(cfg: SweepConfig, universe: int,
                phys: Optional[Tuple[int]] = None) -> Dict:
+    """Masked second-chance Clock state."""
     (C,) = sizes(cfg)
     (pC,) = phys if phys is not None else (C,)
     return dict(keys=jnp.full((pC,), EMPTY),
@@ -64,6 +68,7 @@ def clock_init(cfg: SweepConfig, universe: int,
 
 
 def clock_step(st: Dict, key) -> Tuple[Dict, jnp.ndarray]:
+    """One Clock transition: ``(state, key) -> (state, hit)``."""
     active = key >= 0
     key = jnp.maximum(key, 0)
     slot = st["loc"][key]
@@ -96,6 +101,7 @@ def clock_step(st: Dict, key) -> Tuple[Dict, jnp.ndarray]:
 
 def lru_init(cfg: SweepConfig, universe: int,
              phys: Optional[Tuple[int]] = None) -> Dict:
+    """Masked LRU state (exact, timestamp-argmin victim)."""
     (C,) = sizes(cfg)
     (pC,) = phys if phys is not None else (C,)
     return dict(keys=jnp.full((pC,), EMPTY),
@@ -105,6 +111,7 @@ def lru_init(cfg: SweepConfig, universe: int,
 
 
 def lru_step(st: Dict, key) -> Tuple[Dict, jnp.ndarray]:
+    """One LRU transition: ``(state, key) -> (state, hit)``."""
     active = key >= 0
     key = jnp.maximum(key, 0)
     slot = st["loc"][key]

@@ -604,6 +604,38 @@ class ProdClock2QPlus:
         mask = (self.key != EMPTY) & self.dirty
         return [int(k) for k in self.key[mask]]
 
+    def resident_keys(self):
+        """Resident keys, coldest first: Main Clock entries in hand order
+        (the slot under the hand is the next eviction candidate), then
+        Small FIFO entries by insertion sequence.  This is the admission
+        order a failover rewarm replays so the rebuilt shard evicts in
+        the same relative order the lost one would have
+        (``repro.faults.recovery``)."""
+        out = []
+        ms = self.max_small
+        for i in range(self.main_cap):
+            eid = ms + (self.hand + i) % self.main_cap
+            if int(self.key[eid]) != EMPTY:
+                out.append(int(self.key[eid]))
+        # out-of-bounds main entries (mid-resize strays), slot order
+        for eid in range(ms + self.main_cap, ms + self.max_main):
+            if int(self.key[eid]) != EMPTY:
+                out.append(int(self.key[eid]))
+        smalls = [(int(self.seq[s]), int(self.key[s]))
+                  for s in range(ms) if int(self.key[s]) != EMPTY]
+        out.extend(k for _, k in sorted(smalls))
+        return out
+
+    def ghost_keys(self):
+        """Ghost-ring keys, oldest first (``gpos`` is the next overwrite
+        slot, i.e. the oldest surviving ghost)."""
+        out = []
+        for i in range(self.ghost_cap):
+            slot = (self.gpos + i) % self.ghost_cap
+            if int(self.gkey[slot]) != EMPTY:
+                out.append(int(self.gkey[slot]))
+        return out
+
     # -- live resizing (§4.2) -----------------------------------------------------
     def rehash_pending(self) -> bool:
         """True while the incremental hash migration has work left (it can

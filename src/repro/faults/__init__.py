@@ -1,0 +1,53 @@
+"""Fault injection & crash-consistent recovery for the serving cache.
+
+Four pieces, layered bottom-up (each importable alone):
+
+  * ``plan``     — deterministic seeded fault schedules (``FaultPlan`` /
+    ``NullPlan``): which op faults, decided by a splitmix64 hash of
+    (seed, op sequence) so every chaos run replays bit-identically;
+  * ``io``       — the hardened host-block IO path (``HostIO``): retry /
+    exponential backoff / per-op deadlines on a virtual ``Clock``, plus
+    a ``CircuitBreaker`` that sheds the pool to degraded read-through
+    under sustained failure;
+  * ``snapshot`` — crash-consistent snapshot/restore of full engine
+    state (layout arrays + ghost ring + correlation-window cursors),
+    as an in-memory ``state_dict``, a versioned byte format
+    (``pack``/``unpack``, magic ``C2QSNAP1``), and a ``SnapshotManager``
+    riding the checkpoint store;
+  * ``recovery`` — shard failover: a ``GhostJournal`` of per-shard key
+    metadata rebuilds a lost shard's working set through the normal
+    ghost-promotion path before it rejoins rebalancing.
+
+Layering: ``repro.faults`` sits beside the policy engines (layer 2) and
+may import only ``repro.core`` and ``repro.obs``; the pool/serving
+layers above thread it through their swap paths (``BlockPool(faults=...)``,
+``ServingEngine(faults=...)``).  Everything here is numpy-only — no JAX —
+so chaos tests run anywhere (``SnapshotManager`` lazily pulls in the
+checkpoint store only when used).
+"""
+
+from repro.faults.io import (  # noqa: F401
+    CircuitBreaker, Clock, HostIO, IOResult, RetryPolicy,
+)
+from repro.faults.plan import (  # noqa: F401
+    FAULT_NAMES, IO_DELAY, IO_ERROR, OP_ANY, OP_SWAP_IN, OP_SWAP_OUT,
+    PARTIAL_WRITE, SHARD_LOSS, Fault, FaultPlan, FaultSpec, NullPlan,
+    splitmix64,
+)
+from repro.faults.recovery import GhostJournal, failover  # noqa: F401
+from repro.faults.snapshot import (  # noqa: F401
+    MAGIC, VERSION, SnapshotManager, load_state_dict, pack,
+    policy_from_snapshot, read_snapshot, state_dict, unpack,
+    write_snapshot,
+)
+
+__all__ = [
+    "CircuitBreaker", "Clock", "HostIO", "IOResult", "RetryPolicy",
+    "FAULT_NAMES", "IO_DELAY", "IO_ERROR", "OP_ANY", "OP_SWAP_IN",
+    "OP_SWAP_OUT", "PARTIAL_WRITE", "SHARD_LOSS", "Fault", "FaultPlan",
+    "FaultSpec", "NullPlan", "splitmix64",
+    "GhostJournal", "failover",
+    "MAGIC", "VERSION", "SnapshotManager", "load_state_dict", "pack",
+    "policy_from_snapshot", "read_snapshot", "state_dict", "unpack",
+    "write_snapshot",
+]

@@ -24,6 +24,8 @@ import numpy as np
 
 from repro import obs as obs_mod
 from repro.core.prodcache import EMPTY, ProdClock2QPlus, drive_resize
+from repro.faults import GhostJournal, HostIO, splitmix64
+from repro.faults.recovery import failover as _failover
 from repro.models.config import ModelConfig
 from repro.shardcache import ShardedClock2QPlus
 
@@ -50,7 +52,8 @@ class BlockPool:
                  n_host_blocks: int = 0, dtype=jnp.float32, *,
                  window_frac: float = 0.5, max_hbm_blocks: int = 0,
                  n_shards: int = 0, rebalance_headroom: float = 1.0,
-                 autotune=False, obs=None):
+                 autotune=False, faults=None, io_retry=None,
+                 journal_every: int = 1024, obs=None):
         self.cfg = cfg
         self.bs = block_size
         self.n_blocks = n_hbm_blocks
@@ -103,6 +106,38 @@ class BlockPool:
             "pool_host_blocks", (), "blocks mirrored in the host "
             "tier").labels()
         self.obs.on_collect(lambda: self._g_host.set(float(len(self.host))))
+        # hardened host IO (repro.faults).  faults=None keeps the
+        # historical direct swap path with zero instrumentation; passing
+        # a plan (NullPlan in production) routes every host-block copy
+        # through HostIO — retries/backoff/deadlines, a circuit breaker
+        # that sheds to read-through under sustained failure, torn-write
+        # quarantine, and (on a sharded policy) a GhostJournal captured
+        # every ``journal_every`` lookups so SHARD_LOSS faults trigger
+        # automatic failover.
+        self._io: Optional[HostIO] = None
+        self._journal: Optional[GhostJournal] = None
+        self._corrupt: set = set()
+        self._lookups = 0
+        self.journal_every = journal_every
+        if faults is not None:
+            self._io = HostIO(plan=faults, retry=io_retry, obs=self.obs)
+            self._c_torn = self.obs.counter(
+                "pool_torn_writes_total", (), "swap-outs persisted torn "
+                "(PARTIAL_WRITE) and quarantined").labels()
+            self._c_corrupt = self.obs.counter(
+                "pool_corrupt_dropped_total", (), "quarantined host "
+                "copies dropped at swap-in (read repair: refill from "
+                "origin)").labels()
+            self._c_lost = self.obs.counter(
+                "pool_lost_writes_total", (), "dirty evictions whose "
+                "swap-out failed — content refills from origin").labels()
+            g_deg = self.obs.gauge(
+                "pool_degraded", (), "1 while the breaker has shed host "
+                "IO (read-through mode)").labels()
+            self.obs.on_collect(
+                lambda: g_deg.set(1.0 if self._io.degraded else 0.0))
+            if hasattr(self.policy, "shards"):
+                self._journal = GhostJournal(self.policy)
         # autotune=True (defaults) or a dict of OnlineTuner kwargs: the
         # tuner observes the block-key stream through lookup() and
         # retargets the policy's window / queue fractions online via the
@@ -134,7 +169,16 @@ class BlockPool:
     def lookup(self, key: int, pin: bool = True) -> Tuple[int, bool]:
         """Returns (hbm_slot, needs_fill).  On miss, a slot is allocated
         (evicting per Clock2Q+); if the key has a host copy it is swapped
-        in; otherwise the caller must fill the block (needs_fill=True)."""
+        in; otherwise the caller must fill the block (needs_fill=True).
+        A failed/shed/quarantined swap-in degrades to read-through: the
+        caller refills from the origin exactly as for a cold miss."""
+        if self._io is not None:
+            self._lookups += 1
+            if self._io.pending_shard_loss:
+                self._drain_shard_loss()
+            if self._journal is not None and \
+                    self._lookups % self.journal_every == 0:
+                self._journal.capture(self.policy)
         if self.tuner is not None:
             self.tuner.observe(key)
         r = self.policy.access(key, pin=pin)
@@ -144,28 +188,66 @@ class BlockPool:
         self._c_miss.value += 1
         if r.evicted_key != EMPTY:
             self._on_evict(r.evicted_key, r.evicted_block)
-        if key in self.host:
-            self._swap_in(key, r.block)
+        if key in self.host and self._swap_in(key, r.block):
             self.policy.io_done(key)
             return r.block, False
-        # brand-new block: contents will be written by prefill/decode
+        # brand-new block (or unreadable host copy): contents will be
+        # written by prefill/decode
         return r.block, True
 
     def _on_evict(self, key: int, slot: int) -> None:
-        """HBM eviction: dirty blocks (no host copy) are swapped out."""
+        """HBM eviction: dirty blocks (no host copy) are swapped out.
+        A failed swap-out loses the content (the next access refills from
+        origin); a torn one (PARTIAL_WRITE) is quarantined for read
+        repair at the next swap-in."""
         if key in self.host:
             self._c_drop.value += 1
             return
-        if len(self.host) < self.n_host_blocks:
-            self.host[key] = (np.asarray(self.kpool[:, slot]),
-                              np.asarray(self.vpool[:, slot]))
+        if len(self.host) >= self.n_host_blocks:
+            return
+        if self._io is None:
+            self._copy_out(key, slot)
             self._c_swap_out.value += 1
+            return
+        res = self._io.run("swap_out", key,
+                           lambda: self._copy_out(key, slot))
+        if not res.ok:
+            self._c_lost.value += 1
+            return
+        if res.corrupt:
+            self._corrupt.add(key)
+            self._c_torn.value += 1
+        self._c_swap_out.value += 1
 
-    def _swap_in(self, key: int, slot: int) -> None:
+    def _copy_out(self, key: int, slot: int) -> None:
+        self.host[key] = (np.asarray(self.kpool[:, slot]),
+                          np.asarray(self.vpool[:, slot]))
+
+    def _copy_in(self, key: int, slot: int) -> None:
         k, v = self.host[key]
         self.kpool = self.kpool.at[:, slot].set(jnp.asarray(k))
         self.vpool = self.vpool.at[:, slot].set(jnp.asarray(v))
+
+    def _swap_in(self, key: int, slot: int) -> bool:
+        """Host -> HBM copy through the hardened path.  False = the copy
+        did not happen (IO gave up, breaker shed, or the host copy was
+        quarantined) — the caller serves the miss read-through."""
+        if self._io is None:
+            self._copy_in(key, slot)
+            self._c_swap_in.value += 1
+            return True
+        if key in self._corrupt:
+            # read repair: the torn copy is detected here (the digest-
+            # mismatch path) and dropped; the block refills from origin
+            del self.host[key]
+            self._corrupt.discard(key)
+            self._c_corrupt.value += 1
+            return False
+        res = self._io.run("swap_in", key, lambda: self._copy_in(key, slot))
+        if not res.ok:
+            return False
         self._c_swap_in.value += 1
+        return True
 
     def write_block(self, slot: int, k: jnp.ndarray, v: jnp.ndarray,
                     key: Optional[int] = None) -> None:
@@ -186,13 +268,24 @@ class BlockPool:
         self.policy.unpin(key)
 
     def flush(self, key: int) -> None:
-        """Mirror a dirty block to host (background flusher)."""
+        """Mirror a dirty block to host (background flusher).  Under the
+        hardened path a failed mirror leaves the block dirty, so the
+        watermark flusher naturally retries it; a torn mirror is
+        quarantined like any other swap-out."""
         slot = self.policy.slot_of(key)
         if slot == EMPTY:
             return
         if key not in self.host and len(self.host) < self.n_host_blocks:
-            self.host[key] = (np.asarray(self.kpool[:, slot]),
-                              np.asarray(self.vpool[:, slot]))
+            if self._io is not None:
+                res = self._io.run("swap_out", key,
+                                   lambda: self._copy_out(key, slot))
+                if not res.ok:
+                    return  # still dirty: retried by the next flusher pass
+                if res.corrupt:
+                    self._corrupt.add(key)
+                    self._c_torn.value += 1
+            else:
+                self._copy_out(key, slot)
             self._c_swap_out.value += 1
         self.policy.clean(key)
 
@@ -202,6 +295,46 @@ class BlockPool:
         for k in dirty:
             self.flush(k)
         return len(dirty)
+
+    # -- faults / failover (repro.faults) -----------------------------------------
+    @property
+    def degraded(self) -> bool:
+        """True while host IO is shed (read-through mode).  Always False
+        on the uninstrumented path."""
+        return self._io is not None and self._io.degraded
+
+    def failover_shard(self, sid: int) -> Tuple[int, int]:
+        """Lose shard ``sid`` and rebuild its working set from the ghost
+        journal (``repro.faults.recovery.failover``).  Readmitted keys
+        whose payloads survive in the host tier are refilled directly
+        (the recovery scan reads local copies, not the faulted swap
+        path); the rest are seeded into the ghost ring and refill from
+        origin on their next touch.  Returns (residents, ghosts)."""
+        if self._journal is None:
+            raise RuntimeError("failover needs faults= and a sharded "
+                               "policy (n_shards > 1)")
+        base = sid * self.policy.stride
+
+        def fill(key):
+            if key not in self.host or key in self._corrupt:
+                return None
+            return lambda local: self._copy_in(key, base + local)
+
+        return _failover(self.policy, sid, self._journal, fill=fill)
+
+    def _drain_shard_loss(self) -> None:
+        """Apply SHARD_LOSS faults the plan injected on the IO stream.
+        ``shard=-1`` specs pick the victim by hashing the op sequence the
+        fault fired at (deterministic per seed)."""
+        pending, self._io.pending_shard_loss = \
+            self._io.pending_shard_loss, []
+        if self._journal is None:
+            return  # unsharded policy: nothing to lose a shard from
+        n = self.policy.n_shards
+        for f in pending:
+            sid = f.shard if f.shard >= 0 else \
+                splitmix64(self._io.plan.seed ^ f.op_seq) % n
+            self.failover_shard(sid)
 
     # -- what-if analysis --------------------------------------------------------
     def estimate_mrc(self, capacities=None, *, rate_shift: int = 4,

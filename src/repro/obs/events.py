@@ -36,6 +36,19 @@ EV_RESIZE = 8           # a/b=total capacity before/after (begin_resize)
 EV_RESIZE_DONE = 9      # live-resize migration drained for this shard
 EV_SNAPSHOT = 10        # a=accesses so far, b=hits so far, c=miss ratio
 
+# fault-injection / recovery vocabulary (repro.faults).  These are the
+# incident-timeline records: every injected fault, every retry, every
+# degraded-mode flip, shard loss/rewarm, and state snapshot/restore
+# emits exactly one event, so `tools/obsreport.py --incidents` can
+# reconstruct what happened to a wounded cache from the ring alone.
+EV_FAULT = 11           # a=fault kind code (faults.plan), b=key/op seq
+EV_IO_RETRY = 12        # a=attempt number (1-based), b=backoff ticks
+EV_IO_ERROR = 13        # a=key, b=attempts made (op gave up)
+EV_DEGRADED = 14        # a=1 entered read-through / 0 recovered
+EV_SHARD_LOST = 15      # shard=sid, a=resident entries lost
+EV_SHARD_REWARM = 16    # shard=sid, a=residents readmitted, b=ghosts
+EV_RESTORE = 17         # a=snapshot step restored, b=resident entries
+
 EVENT_NAMES: Dict[int, str] = {
     EV_EVICT: "evict",
     EV_GHOST_PROMOTE: "ghost_promote",
@@ -47,7 +60,20 @@ EVENT_NAMES: Dict[int, str] = {
     EV_RESIZE: "resize",
     EV_RESIZE_DONE: "resize_done",
     EV_SNAPSHOT: "snapshot",
+    EV_FAULT: "fault_inject",
+    EV_IO_RETRY: "io_retry",
+    EV_IO_ERROR: "io_error",
+    EV_DEGRADED: "degraded",
+    EV_SHARD_LOST: "shard_lost",
+    EV_SHARD_REWARM: "shard_rewarm",
+    EV_RESTORE: "restore",
 }
+
+# the subset obsreport's --incidents view keeps: fault/recovery flow
+INCIDENT_KINDS = frozenset((
+    "fault_inject", "io_retry", "io_error", "degraded", "shard_lost",
+    "shard_rewarm", "restore", "rebalance", "resize", "resize_done",
+))
 
 
 class EventRing:

@@ -49,7 +49,7 @@ class ServingEngine:
                  hbm_blocks: int = 64, max_batch: int = 8,
                  max_blocks_per_seq: int = 64, n_shards: int = 0,
                  max_hbm_blocks: int = 0, rebalance_headroom: float = 1.0,
-                 autotune=False, obs=None):
+                 autotune=False, faults=None, io_retry=None, obs=None):
         assert api.cfg.family in ("dense", "vlm", "moe"), \
             "paged serving targets the attention-KV families"
         self.api = api
@@ -61,12 +61,17 @@ class ServingEngine:
         # autotune=True/dict turns on the OnlineTuner backend: the block
         # pool's replacement knobs (correlation window, queue fractions)
         # then track the serving workload online (repro.tuning).
+        # faults= threads a repro.faults FaultPlan through the pool's
+        # host-IO swap path; under sustained IO failure the pool sheds to
+        # read-through and the engine keeps answering (misses refill from
+        # prefill), with queue depth still bounded by max_batch.
         self.pool = BlockPool(api.cfg, hbm_blocks, block_size,
                               dtype=jnp.dtype(api.cfg.dtype),
                               n_shards=n_shards,
                               max_hbm_blocks=max_hbm_blocks,
                               rebalance_headroom=rebalance_headroom,
-                              autotune=autotune)
+                              autotune=autotune, faults=faults,
+                              io_retry=io_retry)
         self.mgr = PagedKVManager(api.cfg, self.pool)
         self.max_batch = max_batch
         self.max_blocks = max_blocks_per_seq
@@ -203,3 +208,9 @@ class ServingEngine:
     @property
     def stats(self):
         return self.pool.stats, dict(self.pool.policy.flows)
+
+    @property
+    def degraded(self) -> bool:
+        """True while the pool serves read-through (host IO shed by the
+        circuit breaker under sustained injected/real failure)."""
+        return self.pool.degraded

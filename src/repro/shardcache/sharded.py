@@ -288,6 +288,55 @@ class ShardedClock2QPlus:
                      hits=s.hits, misses=s.misses)
                 for i, s in enumerate(self.shards)]
 
+    # -- shard failover (repro.faults.recovery) --------------------------------------
+    def lose_shard(self, sid: int) -> "ProdClock2QPlus":
+        """Simulate crash-loss of shard ``sid``: its entire state (resident
+        entries, ghost ring, counters, pending resize) vanishes and a fresh
+        empty shard with IDENTICAL preallocation takes its place, so every
+        global payload handle keeps meaning ``sid * stride + local``.
+
+        The replacement inherits the lost shard's logical capacity and
+        current tuning fractions, its rebalance miss mark is zeroed (its
+        counters restart from zero — a stale mark would make the next
+        miss-delta negative), and any in-flight resize tracking for the
+        shard is dropped.  Emits ``EV_SHARD_LOST`` with the resident count
+        lost.  Returns the dead shard (post-mortem inspection only — its
+        payload handles are no longer valid).
+
+        ``repro.faults.recovery.failover`` builds on this: lose, rewarm
+        from the ghost journal, rejoin rebalancing.
+        """
+        if not (0 <= sid < self.n_shards):
+            raise ValueError(f"no shard {sid}")
+        with self._mutate_lock, self.locks[sid]:
+            old = self.shards[sid]
+            lost = len(old)
+            mc = self.shard_max
+            fresh = ProdClock2QPlus(
+                old.capacity, small_frac=old._small_frac,
+                ghost_frac=old._ghost_frac, window_frac=old._window_frac,
+                skip_limit=old.skip_limit,
+                dirty_scan_limit=old.dirty_scan_limit, max_capacity=mc,
+                track_io=old.track_io,
+                max_small_frac=old.max_small / mc,
+                max_ghost_frac=old.max_ghost / mc,
+                min_small_frac=(mc - old.max_main) / mc, shard_id=sid,
+                obs=type(old.obs)(src=f"cache/shard{sid}",
+                                  labels={"shard": str(sid)}))
+            if (fresh.max_small, fresh.max_main, fresh.max_ghost) != \
+                    (old.max_small, old.max_main, old.max_ghost):
+                raise RuntimeError(
+                    "replacement shard preallocation mismatch: "
+                    f"{(fresh.max_small, fresh.max_main, fresh.max_ghost)}"
+                    f" != {(old.max_small, old.max_main, old.max_ghost)}")
+            self.shards[sid] = fresh
+            self._miss_mark[sid] = 0
+            with self._resize_lock:
+                self._resizing.discard(sid)
+        if self.obs.ring.enabled:
+            self.obs.emit(obs_mod.EV_SHARD_LOST, shard=sid, a=lost)
+        return old
+
     # -- cross-shard capacity rebalancing -------------------------------------------
     def set_shard_capacities(self, caps: Sequence[int],
                              steps_per_call: int = 64,

@@ -25,6 +25,39 @@ def test_layer_of_longest_prefix_wins():
     assert check_layering.layer_of("repro.models.model") is None
 
 
+def test_faults_layer_and_restriction():
+    # faults sits beside traceio at layer 2, so the pool/serving layers
+    # above may thread it in...
+    assert check_layering.layer_of("repro.faults.plan") == 2
+    assert check_layering._restricted_prefix("repro.faults.io") == \
+        "repro.faults"
+    assert check_layering._restricted_prefix("repro.traceio") is None
+    # ...but faults itself is RESTRICTED to core + obs: a faults ->
+    # traceio import would be layer-legal (sideways) yet must still be
+    # flagged
+    allowed = check_layering.RESTRICTED["repro.faults"]
+    assert check_layering._in_allowed("repro.core.prodcache", allowed)
+    assert check_layering._in_allowed("repro.obs.events", allowed)
+    assert not check_layering._in_allowed("repro.traceio.stream", allowed)
+    assert not check_layering._in_allowed("repro.kvcache.pool", allowed)
+
+
+def test_restricted_violation_is_reported(tmp_path):
+    # synthesize a faults module with a sideways traceio import and run
+    # the real checker over it: the RESTRICTED rule must fire even
+    # though plain layer ordering (2 -> 2) would allow the edge
+    pkg = tmp_path / "repro" / "faults"
+    pkg.mkdir(parents=True)
+    (tmp_path / "repro" / "__init__.py").write_text("")
+    (pkg / "__init__.py").write_text("")
+    (pkg / "bad.py").write_text("import repro.traceio\n")
+    violations = check_layering.check(tmp_path)
+    assert len(violations) == 1 and "restricted" in violations[0]
+    # the same import from an unrestricted layer-2 package is fine
+    (pkg / "bad.py").write_text("import repro.core.prodcache\n")
+    assert check_layering.check(tmp_path) == []
+
+
 def test_obs_is_sealed():
     # obs is instrumented by every layer, so it must not import any
     # layered package itself — not even sideways at layer 0

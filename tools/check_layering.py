@@ -10,15 +10,21 @@ only point DOWNWARD or sideways within a package, never upward):
                              — every layer instruments, none leaks back)
     1  repro.core            reference zoo, prod cache, replay drivers
     2  repro.traceio         trace storage/streaming
+    2  repro.faults          fault injection & recovery (RESTRICTED:
+                             besides the usual downward rule it may
+                             import ONLY repro.core and repro.obs —
+                             never traceio sideways — so chaos machinery
+                             stays a leaf the layers above thread in)
     3  repro.tuning, repro.shardcache, repro.kvcache, repro.kernels
     4  repro.serving
 
 Only MODULE-LEVEL imports count: a function-level (lazy) import is an
 explicit escape hatch for same-layer or upward references on cold paths
 (e.g. ``kvcache.pool`` building an ``OnlineTuner`` only when
-``autotune=`` is requested) and is deliberately exempt.  Packages not
-listed (models, checkpoint, training, ...) are outside the cache
-subsystem and unconstrained.
+``autotune=`` is requested, or ``faults.snapshot`` reaching the
+checkpoint store) and is deliberately exempt.  Packages not listed
+(models, checkpoint, training, ...) are outside the cache subsystem and
+unconstrained.
 
 Run from the repo root:  python tools/check_layering.py
 Exits non-zero listing every violation.  Also run by
@@ -38,6 +44,7 @@ LAYERS = {
     "repro.obs": 0,
     "repro.core": 1,
     "repro.traceio": 2,
+    "repro.faults": 2,
     "repro.tuning": 3,
     "repro.shardcache": 3,
     "repro.kvcache": 3,
@@ -50,12 +57,32 @@ LAYERS = {
 # import would be a cycle waiting to happen
 SEALED = {"repro.obs"}
 
+# restricted packages have an explicit allow-list of layered packages
+# they may import (tighter than the downward rule): repro.faults must
+# stay a leaf over the policy core — a faults -> traceio edge, although
+# "sideways", would let chaos machinery grow into a second trace stack
+RESTRICTED = {
+    "repro.faults": ("repro.core", "repro.obs", "repro.faults"),
+}
+
 
 def _sealed_prefix(module: str) -> str | None:
     for prefix in SEALED:
         if module == prefix or module.startswith(prefix + "."):
             return prefix
     return None
+
+
+def _restricted_prefix(module: str) -> str | None:
+    for prefix in RESTRICTED:
+        if module == prefix or module.startswith(prefix + "."):
+            return prefix
+    return None
+
+
+def _in_allowed(imported: str, allowed: tuple) -> bool:
+    return any(imported == p or imported.startswith(p + ".")
+               for p in allowed)
 
 
 def layer_of(module: str) -> int | None:
@@ -108,6 +135,7 @@ def check(src: pathlib.Path):
             continue
         tree = ast.parse(path.read_text(), filename=str(path))
         sealed = _sealed_prefix(mod)
+        restricted = _restricted_prefix(mod)
         for lineno, imported in module_level_imports(tree):
             imp_layer = layer_of(imported)
             if imp_layer is None:
@@ -116,6 +144,12 @@ def check(src: pathlib.Path):
                 violations.append(
                     f"{path}:{lineno}: {mod} (sealed) imports layered "
                     f"package {imported}")
+            elif restricted and not _in_allowed(imported,
+                                                RESTRICTED[restricted]):
+                violations.append(
+                    f"{path}:{lineno}: {mod} (restricted) imports "
+                    f"{imported} — allowed: "
+                    f"{', '.join(RESTRICTED[restricted])}")
             elif imp_layer > mod_layer:
                 violations.append(
                     f"{path}:{lineno}: {mod} (layer {mod_layer}) imports "

@@ -4,6 +4,9 @@
     PYTHONPATH=src python tools/obsreport.py SNAP.json
     PYTHONPATH=src python tools/obsreport.py OLD.json NEW.json   # delta
     ... --events 40        # show up to N trailing events (default 20)
+    ... --incidents        # incident timeline only (faults, retries,
+                           # degraded-mode flips, shard loss/rewarm,
+                           # restores, rebalances/resizes)
     ... --prom             # emit Prometheus text instead of the report
 
 Snapshots come from ``ObsSink.snapshot().to_json()`` anywhere in the
@@ -22,7 +25,8 @@ from collections import defaultdict
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
                        / "src"))
 
-from repro.obs import Snapshot, delta, to_prometheus  # noqa: E402
+from repro.faults import FAULT_NAMES  # noqa: E402
+from repro.obs import INCIDENT_KINDS, Snapshot, delta, to_prometheus  # noqa: E402
 from repro.obs.metrics import parse_sample_key  # noqa: E402
 
 
@@ -84,6 +88,47 @@ def render(snap: Snapshot, n_events: int = 20) -> str:
     return "\n".join(out) + "\n"
 
 
+def _describe_incident(e: dict) -> str:
+    kind, shard, a, b = e["kind"], e["shard"], e["a"], e["b"]
+    if kind == "fault_inject":
+        return f"injected {FAULT_NAMES.get(a, a)} (op #{b})"
+    if kind == "io_retry":
+        return f"IO retry #{a} after {b}-tick backoff"
+    if kind == "io_error":
+        return f"IO op on key {a} abandoned after {b} attempts"
+    if kind == "degraded":
+        return ("ENTERED read-through (breaker open)" if a
+                else "recovered to healthy (breaker closed)")
+    if kind == "shard_lost":
+        return f"shard {shard} LOST ({a} resident entries gone)"
+    if kind == "shard_rewarm":
+        return f"shard {shard} rewarmed: {a} residents readmitted, " \
+               f"{b} ghost-seeded"
+    if kind == "restore":
+        return f"restored snapshot step {a} ({b} resident entries)"
+    if kind == "rebalance":
+        return f"shard {shard} capacity retarget {a} -> {b}"
+    if kind in ("resize", "resize_done"):
+        return f"shard {shard} resize" + \
+               (" complete" if kind == "resize_done" else f" -> {a}")
+    return f"shard={shard} a={a} b={b}"
+
+
+def render_incidents(snap: Snapshot, n_events: int = 200) -> str:
+    """The incident timeline: only fault/recovery-relevant typed events
+    (``obs.INCIDENT_KINDS``), one annotated line each, in ring order."""
+    incidents = [e for e in snap.events if e["kind"] in INCIDENT_KINDS]
+    out = [f"== incident timeline @ ts={snap.ts:.3f} "
+           f"({len(incidents)} incident events of {len(snap.events)} "
+           f"retained) =="]
+    for e in incidents[-n_events:]:
+        out.append(f"  [{e['src']}:{e['seq']:>6}] {e['kind']:<13} "
+                   f"{_describe_incident(e)}")
+    if not incidents:
+        out.append("  (no incidents recorded)")
+    return "\n".join(out) + "\n"
+
+
 def _quantile(h: dict, q: float) -> float:
     total = h["count"]
     run = 0
@@ -120,6 +165,10 @@ def main(argv=None) -> int:
                     help="max trailing events to show (default 20)")
     ap.add_argument("--prom", action="store_true",
                     help="emit Prometheus text exposition instead")
+    ap.add_argument("--incidents", action="store_true",
+                    help="render only the incident timeline (faults, "
+                         "retries, degraded flips, shard loss/rewarm, "
+                         "restores, rebalances)")
     args = ap.parse_args(argv)
 
     snap = load(args.snapshot)
@@ -128,6 +177,8 @@ def main(argv=None) -> int:
         snap.meta["delta"] = "1"
     if args.prom:
         sys.stdout.write(to_prometheus(snap))
+    elif args.incidents:
+        sys.stdout.write(render_incidents(snap, max(args.events, 200)))
     else:
         sys.stdout.write(render(snap, args.events))
     return 0

@@ -14,7 +14,8 @@ import sys
 import time
 from pathlib import Path
 
-from benchmarks import faults, paper_figs, perf, scenarios, shard, tuning
+from benchmarks import (faults, paper_figs, perf, scenarios, serving, shard,
+                        tuning)
 
 BENCHES = [
     ("fig7", paper_figs.fig7_fidelity),
@@ -26,6 +27,7 @@ BENCHES = [
     ("fig13", paper_figs.fig13_window),
     ("fig14", paper_figs.fig14_nonblock),
     ("fig_scenario_matrix", scenarios.fig_scenario_matrix),
+    ("fig_sched_slo", serving.fig_sched_slo),
     ("fig_policy_tuning", scenarios.fig_policy_tuning),
     ("fig_shard", shard.fig_shard_fidelity),
     ("fig_shard_jax", shard.fig_shard_jax_fidelity),
@@ -34,6 +36,7 @@ BENCHES = [
     ("perf_cpu", perf.perf_cpu_overhead),
     ("perf_obs", perf.perf_obs_overhead),
     ("perf_faults", faults.perf_fault_overhead),
+    ("perf_sched_tick", serving.perf_sched_tick),
     ("perf_sweep_grid", tuning.perf_sweep_grid),
     ("perf_shard_scalability", shard.perf_shard_scalability),
     ("perf_engine", perf.perf_jax_engine),

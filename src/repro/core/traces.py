@@ -291,6 +291,53 @@ def metadata_trace(n: int, fanout: int = DEFAULT_FANOUT,
     return derive_metadata(data, fanout=fanout)
 
 
+# =============================================================================
+# arrival processes (serving-scheduler simulation harness)
+# =============================================================================
+# These generators emit *arrival ticks* (sorted, non-decreasing int64) for
+# n requests on the scheduler's virtual clock, not cache keys — but they
+# live in the same registry so the simulation harness and the SLO
+# benchmark resolve them by name like any other workload class.
+
+def poisson_arrivals(n: int, mean_gap: float = 2.0,
+                     seed: int = 0) -> np.ndarray:
+    """Poisson process: exponential inter-arrival times with mean
+    ``mean_gap`` ticks, floored onto the integer clock."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(mean_gap, n)
+    return np.floor(np.cumsum(gaps)).astype(np.int64)
+
+
+def burst_arrivals(n: int, burst: int = 16, period: int = 32,
+                   seed: int = 0) -> np.ndarray:
+    """On/off bursts: ``burst`` requests land on the same tick every
+    ``period`` ticks, with ±25% seeded jitter on the period — the open-
+    loop batch-ingest shape that stresses queue bounds and displacement."""
+    rng = np.random.default_rng(seed)
+    out, t = [], 0
+    while len(out) < n:
+        out.extend([t] * min(burst, n - len(out)))
+        t += period + int(rng.integers(-(period // 4), period // 4 + 1))
+    return np.asarray(out[:n], dtype=np.int64)
+
+
+def adversarial_arrivals(n: int, herd: int = 64, lull: int = 96,
+                         seed: int = 0) -> np.ndarray:
+    """Thundering herd: long lulls, then a same-tick herd sized to
+    overflow the default admission queue, with a seeded trickle during
+    the lull — the worst case for bounded admission (sheds and
+    displacement every herd) while the lulls test drain-to-idle."""
+    rng = np.random.default_rng(seed)
+    out, t = [], 0
+    while len(out) < n:
+        out.extend([t] * min(herd, n - len(out)))
+        trickle = sorted(rng.integers(t + 1, t + lull,
+                                      max(1, herd // 16)).tolist())
+        out.extend(trickle[:max(0, n - len(out))])
+        t += lull
+    return np.asarray(out[:n], dtype=np.int64)
+
+
 @dataclass(frozen=True)
 class TraceSpec:
     """Named, seeded workload used across benchmarks (a stand-in for one
@@ -453,6 +500,18 @@ register_scenario(
     "ghost-thrash",
     "adversarial round-robin: every reuse lands in the Ghost ring",
     ghost_thrash_trace)
+register_scenario(
+    "arrivals-poisson",
+    "serving arrival ticks: Poisson process, mean gap 2 ticks",
+    poisson_arrivals)
+register_scenario(
+    "arrivals-burst",
+    "serving arrival ticks: same-tick bursts of 16 every ~32 ticks",
+    burst_arrivals)
+register_scenario(
+    "arrivals-adversarial",
+    "serving arrival ticks: thundering herds of 64 between long lulls",
+    adversarial_arrivals)
 
 
 def footprint(trace: np.ndarray) -> int:

@@ -12,7 +12,7 @@ Block keys:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -36,6 +36,7 @@ class SeqState:
     block_keys: List[int]
     slots: List[int]
     out_tokens: List[int] = dataclasses.field(default_factory=list)
+    tenant: Optional[str] = None  # serving tenant (pool lookup labels)
 
     @property
     def length(self) -> int:
@@ -51,10 +52,13 @@ class PagedKVManager:
         self._next_handle = _HASH_SPACE  # tail-block handles above hashes
 
     # -- admission -----------------------------------------------------------
-    def admit(self, seq_id: int, tokens: List[int]) -> Tuple[SeqState, List[int]]:
+    def admit(self, seq_id: int, tokens: List[int],
+              tenant: Optional[str] = None) -> Tuple[SeqState, List[int]]:
         """Allocate blocks for a prompt.  Returns (state, fill_list): the
         indices of blocks whose contents must be computed by prefill
-        (prefix-cache hits need no recompute)."""
+        (prefix-cache hits need no recompute).  ``tenant`` attributes
+        every block lookup of this sequence — admission and decode-tail
+        — to the owning serving tenant."""
         n_blocks = -(-len(tokens) // self.bs)
         keys, slots, fill = [], [], []
         for b in range(n_blocks):
@@ -65,12 +69,13 @@ class PagedKVManager:
             else:
                 key = self._next_handle
                 self._next_handle += 1
-            slot, needs_fill = self.pool.lookup(key, pin=True)
+            slot, needs_fill = self.pool.lookup(key, pin=True,
+                                                tenant=tenant)
             keys.append(key)
             slots.append(slot)
             if needs_fill or not full:
                 fill.append(b)
-        st = SeqState(seq_id, list(tokens), keys, slots)
+        st = SeqState(seq_id, list(tokens), keys, slots, tenant=tenant)
         self.seqs[seq_id] = st
         return st, fill
 
@@ -82,7 +87,7 @@ class PagedKVManager:
         while pos // self.bs >= len(st.slots):
             key = self._next_handle
             self._next_handle += 1
-            slot, _ = self.pool.lookup(key, pin=True)
+            slot, _ = self.pool.lookup(key, pin=True, tenant=st.tenant)
             # contents arrive via write_token in the same step: the block
             # is immediately usable (leaving it DOING-IO would wedge the
             # live-resize drain, §4.2)

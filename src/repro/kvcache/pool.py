@@ -106,6 +106,11 @@ class BlockPool:
             "pool_host_blocks", (), "blocks mirrored in the host "
             "tier").labels()
         self.obs.on_collect(lambda: self._g_host.set(float(len(self.host))))
+        # per-tenant lookup attribution (serving threads tenant labels
+        # through admissions; None keeps the historical unlabeled keys)
+        self._tenant_fam = self.obs.counter(
+            "pool_tenant_lookups_total", ("tenant", "result"),
+            "block lookups attributed to serving tenants")
         # hardened host IO (repro.faults).  faults=None keeps the
         # historical direct swap path with zero instrumentation; passing
         # a plan (NullPlan in production) routes every host-block copy
@@ -166,12 +171,15 @@ class BlockPool:
         return obs_mod.merge([self.obs.snapshot(), pol_snap])
 
     # -- residency ------------------------------------------------------------
-    def lookup(self, key: int, pin: bool = True) -> Tuple[int, bool]:
+    def lookup(self, key: int, pin: bool = True,
+               tenant: Optional[str] = None) -> Tuple[int, bool]:
         """Returns (hbm_slot, needs_fill).  On miss, a slot is allocated
         (evicting per Clock2Q+); if the key has a host copy it is swapped
         in; otherwise the caller must fill the block (needs_fill=True).
         A failed/shed/quarantined swap-in degrades to read-through: the
-        caller refills from the origin exactly as for a cold miss."""
+        caller refills from the origin exactly as for a cold miss.
+        ``tenant`` additionally attributes the lookup to a serving
+        tenant (``pool_tenant_lookups_total{tenant,result}``)."""
         if self._io is not None:
             self._lookups += 1
             if self._io.pending_shard_loss:
@@ -182,6 +190,9 @@ class BlockPool:
         if self.tuner is not None:
             self.tuner.observe(key)
         r = self.policy.access(key, pin=pin)
+        if tenant is not None:
+            self._tenant_fam.labels(
+                tenant, "hit" if r.hit else "miss").value += 1
         if r.hit:
             self._c_hit.value += 1
             return r.block, False
@@ -295,6 +306,28 @@ class BlockPool:
         for k in dirty:
             self.flush(k)
         return len(dirty)
+
+    # -- backpressure (serving scheduler) -----------------------------------------
+    def pinned_count(self) -> int:
+        """Resident blocks currently pinned (unevictable) — the hard
+        part of occupancy: unpinned blocks are reclaimable by Clock2Q+
+        on demand, pinned ones are held by live sequences."""
+        if hasattr(self.policy, "shards"):
+            return sum(int((s.pin > 0).sum()) for s in self.policy.shards)
+        return int((self.policy.pin > 0).sum())
+
+    def free_fraction(self) -> float:
+        """Fraction of the HBM budget not pinned — the scheduler's
+        free-block watermark signal (1.0 = nothing held)."""
+        return 1.0 - self.pinned_count() / max(1, self.n_blocks)
+
+    def io_clock(self):
+        """The virtual tick clock the serving scheduler should run on:
+        the hardened host-IO path's clock when fault injection is armed
+        (so IO backoff time and scheduler time share one axis), a fresh
+        one otherwise."""
+        from repro.faults.io import Clock
+        return self._io.clock if self._io is not None else Clock()
 
     # -- faults / failover (repro.faults) -----------------------------------------
     @property

@@ -49,6 +49,15 @@ EV_SHARD_LOST = 15      # shard=sid, a=resident entries lost
 EV_SHARD_REWARM = 16    # shard=sid, a=residents readmitted, b=ghosts
 EV_RESTORE = 17         # a=snapshot step restored, b=resident entries
 
+# serving-scheduler vocabulary (repro.serving.scheduler).  The scheduler
+# runs on a virtual tick clock, so `shard` carries the tick the decision
+# was made at — the events ARE the schedule, and the simulation-test
+# harness asserts the stream is bit-identical per seed.
+EV_ADMIT = 18           # shard=tick, a=req_id, b=priority class
+EV_REJECT = 19          # shard=tick, a=req_id, b=reason code
+EV_SHED = 20            # shard=tick, a=req_id, b=reason code
+EV_BATCH = 21           # shard=tick, a=prefills, b=decodes, c=token budget used
+
 EVENT_NAMES: Dict[int, str] = {
     EV_EVICT: "evict",
     EV_GHOST_PROMOTE: "ghost_promote",
@@ -67,12 +76,19 @@ EVENT_NAMES: Dict[int, str] = {
     EV_SHARD_LOST: "shard_lost",
     EV_SHARD_REWARM: "shard_rewarm",
     EV_RESTORE: "restore",
+    EV_ADMIT: "admit",
+    EV_REJECT: "reject",
+    EV_SHED: "shed",
+    EV_BATCH: "batch",
 }
 
 # the subset obsreport's --incidents view keeps: fault/recovery flow
+# (plus scheduler load-shedding/rejection — the serving half of an
+# incident timeline: a degraded flip is usually followed by sheds)
 INCIDENT_KINDS = frozenset((
     "fault_inject", "io_retry", "io_error", "degraded", "shard_lost",
     "shard_rewarm", "restore", "rebalance", "resize", "resize_done",
+    "shed", "reject",
 ))
 
 

@@ -1,10 +1,18 @@
 """Serving runtime: continuous batching over the Clock2Q+-paged KV pool.
 
 Flow per request:
-  admit -> prefix-cache lookup (shared full blocks hit; correlated
-  references!) -> prefill only the blocks that missed -> decode loop with
-  paged attention (block-table gather) -> release (blocks stay cached,
-  unpinned, for future prefix hits).
+  submit -> admission control (bounded queue, priority classes, SLO
+  deadlines — repro.serving.scheduler) -> prefix-cache lookup (shared
+  full blocks hit; correlated references!) -> prefill only the blocks
+  that missed -> decode loop with paged attention (block-table gather)
+  -> release (blocks stay cached, unpinned, for future prefix hits).
+
+``run()`` is a thin client of the ``Scheduler``: batch formation,
+backpressure (free-block watermarks + the faults ``degraded`` flag) and
+shedding all live there; this module only knows how to execute a
+prefill/decode/release against the model (``EngineExecutor``).  The old
+synchronous loop survives as ``run_sync`` — a compat shim and the
+reference the scheduler's greedy tokens are locked against.
 
 Under HBM pressure the Clock2Q+ policy evicts cold blocks to the host
 tier; dirty (HBM-only) blocks are flushed by the watermark flusher before
@@ -15,7 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -26,19 +34,34 @@ from repro.kvcache.manager import PagedKVManager
 from repro.kvcache.pool import BlockPool
 from repro.models import transformer as T
 from repro.models.model import ModelAPI
+from repro.serving.admission import ST_COMPLETED, SchedRequest
+from repro.serving.scheduler import SchedConfig, Scheduler
 
 
 @dataclasses.dataclass
 class Request:
+    """One serving request.  ``priority``/``deadline``/``tenant`` feed
+    the scheduler (deadline in virtual ticks from submission; 0 = no
+    SLO); the defaults reproduce the pre-scheduler behaviour."""
+
     req_id: int
     prompt: List[int]
     max_new: int = 16
+    priority: int = 1
+    deadline: int = 0
+    tenant: str = "default"
 
 
 @dataclasses.dataclass
 class Completion:
+    """Terminal record: ``status`` is completed / shed / rejected (only
+    completed carries tokens).  Oversized prompts — more blocks than the
+    pool could ever pin — are now an explicit ``rejected`` completion
+    instead of a silent drop."""
+
     req_id: int
     tokens: List[int]
+    status: str = ST_COMPLETED
 
 
 class ServingEngine:
@@ -130,68 +153,148 @@ class ServingEngine:
             self.pool.write_block(st.slots[b], kb, vb, key=st.block_keys[b])
         return int(jnp.argmax(logits[0, n_real - 1]))
 
-    # -- main loop ------------------------------------------------------------------
-    def run(self, requests: List[Request]) -> List[Completion]:
-        pending = list(requests)
+    # -- execution primitives (what the scheduler drives) ------------------------
+    def _max_seq_blocks(self) -> int:
+        """Blocks one sequence may ever hold: pool capacity, bounded by
+        the block-table width the decode kernel was compiled for."""
+        return min(self.pool.n_blocks, self.max_blocks)
+
+    def _oversize(self, r: Request) -> bool:
+        """A prompt + decode tail needing more blocks than the pool can
+        pin can never be served — the old loop silently wedged on these;
+        they are now rejected explicitly."""
+        need = -(-(len(r.prompt) + r.max_new) // self.pool.bs)
+        return need > self._max_seq_blocks()
+
+    def _start(self, r: Request, tenant: str = "default") -> int:
+        """Admit + prefill one request; returns its first token."""
+        self._admit_ts[r.req_id] = time.perf_counter()
+        st, fill = self.mgr.admit(r.req_id, r.prompt, tenant=tenant)
+        first = self._prefill_into_pool(st, fill)
+        st.out_tokens.append(first)  # from prefill logits
+        return first
+
+    def _decode_step(self, ids: List[int]) -> Dict[int, int]:
+        """One decode step for the sequences in ``ids`` (<= max_batch):
+        each sequence's newest token (at position pos) writes its KV at
+        pos and attends to [0, pos].  Returns {req_id: next token}."""
+        toks, poss, bts, sids, soffs = [], [], [], [], []
+        for rid in ids:
+            st = self.mgr.seqs[rid]
+            pos = st.length - 1           # position of the token processed
+            toks.append(st.out_tokens[-1])
+            poss.append(pos)
+            slot, off = self.mgr.slot_for_pos(rid, pos)
+            sids.append(slot)
+            soffs.append(off)
+            bts.append(self.mgr.block_table(rid, self.max_blocks))
+        # pad to max_batch (one compile for all batch sizes); padded
+        # rows duplicate the last row — they rewrite identical values
+        while len(toks) < self.max_batch:
+            toks.append(toks[-1])
+            poss.append(poss[-1])
+            sids.append(sids[-1])
+            soffs.append(soffs[-1])
+            bts.append(bts[-1])
+        t_step = time.perf_counter()
+        logits, kp, vp = self._decode_fn(
+            self.params, jnp.asarray(toks, jnp.int32)[:, None],
+            self.pool.kpool, self.pool.vpool,
+            jnp.asarray(np.stack(bts)), jnp.asarray(poss, jnp.int32),
+            jnp.asarray(sids, jnp.int32), jnp.asarray(soffs, jnp.int32))
+        self.pool.kpool, self.pool.vpool = kp, vp
+        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+        self._h_decode.observe(time.perf_counter() - t_step)
+        out = {}
+        for i, rid in enumerate(ids):
+            tok = int(nxt[i])
+            self.mgr.seqs[rid].out_tokens.append(tok)
+            out[rid] = tok
+        self.mgr.maintenance()
+        return out
+
+    def _finish(self, rid: int) -> Completion:
+        """Release a completed sequence + engine-tier telemetry."""
+        st = self.mgr.seqs[rid]
+        done = Completion(rid, list(st.out_tokens))
+        self._h_latency.observe(
+            time.perf_counter() - self._admit_ts.pop(rid))
+        self._c_requests.value += 1
+        self._c_tokens.value += len(st.out_tokens)
+        self.mgr.release(rid)
+        return done
+
+    # -- main loop: thin client of the continuous-batching scheduler -------------
+    def run(self, requests: List[Request],
+            arrivals: Optional[List[int]] = None, *,
+            config: Optional[SchedConfig] = None,
+            seed: int = 0) -> List[Completion]:
+        """Serve ``requests`` through the admission-controlled scheduler
+        (repro.serving.scheduler).  ``arrivals[i]`` staggers submission
+        over virtual ticks (default: everything at once — the historical
+        call shape); ``Request.deadline`` is interpreted relative to
+        submission.  Greedy tokens are batch-composition-independent, so
+        completed outputs are identical to ``run_sync`` on the same
+        request set.  Returns one Completion per request — completed,
+        shed, or rejected — in termination order."""
+        sched = self.make_scheduler(config=config, seed=seed)
+        base = sched.clock.now
+        sreqs = [SchedRequest(
+            req_id=r.req_id, prompt_len=len(r.prompt), max_new=r.max_new,
+            priority=r.priority,
+            deadline=(base + int(a or 0) + r.deadline) if r.deadline else 0,
+            tenant=r.tenant, payload=r)
+            for r, a in zip(requests,
+                            arrivals or [0] * len(requests))]
+        abs_arrivals = None if arrivals is None \
+            else [base + int(a) for a in arrivals]
+        outs = sched.run(sreqs, abs_arrivals)
+        self._g_pending.set(float(len(sched.queue)))
+        self._g_active.set(float(len(sched.active)))
+        self._last_scheduler = sched
+        return [Completion(o.req_id, o.tokens, status=o.status)
+                for o in outs]
+
+    def make_scheduler(self, *, config: Optional[SchedConfig] = None,
+                       seed: int = 0) -> Scheduler:
+        """A scheduler wired to this engine: executes on the model,
+        reads backpressure from the pool (free-block watermark + the
+        faults ``degraded`` flag), shares the pool's virtual IO clock
+        when fault injection is armed, and reports into the engine's obs
+        sink (one merged stack snapshot)."""
+        cfg = config or SchedConfig(max_batch=self.max_batch)
+        clock = self.pool.io_clock()
+        return Scheduler(EngineExecutor(self), config=cfg, clock=clock,
+                         seed=seed, obs=self.obs)
+
+    # -- compat shim: the pre-scheduler synchronous loop --------------------------
+    def run_sync(self, requests: List[Request]) -> List[Completion]:
+        """The old synchronous loop: FIFO admission up to ``max_batch``,
+        no priorities, no deadlines, no backpressure.  Kept as the
+        reference path — the conformance tests lock the scheduler's
+        greedy tokens against it — and for callers that want the
+        historical semantics."""
+        pending, done = [], []
+        for r in requests:
+            if self._oversize(r):
+                done.append(Completion(r.req_id, [], status="rejected"))
+            else:
+                pending.append(r)
         active: Dict[int, Request] = {}
-        done: List[Completion] = []
         while pending or active:
-            # admit
             while pending and len(active) < self.max_batch:
                 r = pending.pop(0)
-                self._admit_ts[r.req_id] = time.perf_counter()
-                st, fill = self.mgr.admit(r.req_id, r.prompt)
-                first = self._prefill_into_pool(st, fill)
-                st.out_tokens.append(first)  # from prefill logits
+                self._start(r)
                 active[r.req_id] = r
             for rid in [rid for rid, r in active.items()
                         if len(self.mgr.seqs[rid].out_tokens) >= r.max_new]:
-                st = self.mgr.seqs[rid]
-                done.append(Completion(rid, list(st.out_tokens)))
-                self._h_latency.observe(
-                    time.perf_counter() - self._admit_ts.pop(rid))
-                self._c_requests.value += 1
-                self._c_tokens.value += len(st.out_tokens)
-                self.mgr.release(rid)
+                done.append(self._finish(rid))
                 del active[rid]
             self._g_pending.set(float(len(pending)))
             self._g_active.set(float(len(active)))
             if not active:
                 continue
-            # one decode step for the whole active batch: each sequence's
-            # newest token (at position pos) writes its KV at pos and
-            # attends to [0, pos].
-            ids = sorted(active)
-            toks, poss, bts, sids, soffs = [], [], [], [], []
-            for rid in ids:
-                st = self.mgr.seqs[rid]
-                pos = st.length - 1       # position of the token processed
-                toks.append(st.out_tokens[-1])
-                poss.append(pos)
-                slot, off = self.mgr.slot_for_pos(rid, pos)
-                sids.append(slot)
-                soffs.append(off)
-                bts.append(self.mgr.block_table(rid, self.max_blocks))
-            # pad to max_batch (one compile for all batch sizes); padded
-            # rows duplicate the last row — they rewrite identical values
-            while len(toks) < self.max_batch:
-                toks.append(toks[-1])
-                poss.append(poss[-1])
-                sids.append(sids[-1])
-                soffs.append(soffs[-1])
-                bts.append(bts[-1])
-            t_step = time.perf_counter()
-            logits, kp, vp = self._decode_fn(
-                self.params, jnp.asarray(toks, jnp.int32)[:, None],
-                self.pool.kpool, self.pool.vpool,
-                jnp.asarray(np.stack(bts)), jnp.asarray(poss, jnp.int32),
-                jnp.asarray(sids, jnp.int32), jnp.asarray(soffs, jnp.int32))
-            self.pool.kpool, self.pool.vpool = kp, vp
-            nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
-            self._h_decode.observe(time.perf_counter() - t_step)
-            for i, rid in enumerate(ids):
-                self.mgr.seqs[rid].out_tokens.append(int(nxt[i]))
-            self.mgr.maintenance()
+            self._decode_step(sorted(active))
         return done
 
     def cache_mrc(self, capacities=None, **kw):
@@ -214,3 +317,31 @@ class ServingEngine:
         """True while the pool serves read-through (host IO shed by the
         circuit breaker under sustained injected/real failure)."""
         return self.pool.degraded
+
+
+class EngineExecutor:
+    """The ``Scheduler``'s executor surface over a ``ServingEngine``:
+    prefill/decode/release run the model against the paged pool, and the
+    capacity/backpressure reads come straight from the pool (pinned-
+    block watermark, faults ``degraded`` flag)."""
+
+    def __init__(self, eng: ServingEngine):
+        self.eng = eng
+        self.block_size = eng.pool.bs
+        self.n_blocks = eng._max_seq_blocks()
+
+    @property
+    def degraded(self) -> bool:
+        return self.eng.pool.degraded
+
+    def free_fraction(self) -> float:
+        return self.eng.pool.free_fraction()
+
+    def prefill(self, r: SchedRequest) -> int:
+        return self.eng._start(r.payload, tenant=r.tenant)
+
+    def decode(self, ids: List[int]) -> Dict[int, int]:
+        return self.eng._decode_step(ids)
+
+    def release(self, rid: int) -> None:
+        self.eng._finish(rid)

@@ -92,6 +92,24 @@ def test_eviction_under_pressure_swaps_to_host(small_model):
     assert "serve_request_latency_seconds_bucket" in to_prometheus(snap)
 
 
+def test_oversized_prompt_rejected_not_dropped(small_model):
+    # a prompt + decode tail needing more blocks than the pool can pin
+    # used to wedge the run loop (pinned-beyond-capacity spin); it is
+    # now an explicit rejected Completion, and the feasible requests in
+    # the same batch are served normally
+    api, params = small_model
+    rng = np.random.default_rng(4)
+    eng = ServingEngine(api, params, block_size=8, hbm_blocks=8,
+                        max_batch=2)
+    big = Request(0, list(rng.integers(0, api.cfg.vocab, 200)), max_new=4)
+    ok = Request(1, list(rng.integers(0, api.cfg.vocab, 16)), max_new=3)
+    for run in (eng.run, eng.run_sync):
+        outs = {c.req_id: c for c in run([big, ok])}
+        assert outs[0].status == "rejected" and outs[0].tokens == []
+        assert outs[1].status == "completed"
+        assert outs[1].tokens == _ref_generate(api, params, ok.prompt, 3)
+
+
 def test_live_pool_resize(small_model):
     api, params = small_model
     rng = np.random.default_rng(3)

@@ -28,6 +28,7 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
 from repro.faults import FAULT_NAMES  # noqa: E402
 from repro.obs import INCIDENT_KINDS, Snapshot, delta, to_prometheus  # noqa: E402
 from repro.obs.metrics import parse_sample_key  # noqa: E402
+from repro.serving.admission import SHED_REASONS  # noqa: E402
 
 
 def load(path: str) -> Snapshot:
@@ -111,6 +112,9 @@ def _describe_incident(e: dict) -> str:
     if kind in ("resize", "resize_done"):
         return f"shard {shard} resize" + \
                (" complete" if kind == "resize_done" else f" -> {a}")
+    if kind in ("shed", "reject"):
+        # scheduler events carry the virtual tick in the shard column
+        return f"req {a} {kind} at tick {shard} ({SHED_REASONS.get(b, b)})"
     return f"shard={shard} a={a} b={b}"
 
 

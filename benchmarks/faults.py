@@ -110,3 +110,113 @@ def perf_fault_overhead() -> List[str]:
     # the gate: ratio rides the us column (us_factor rules are one-sided)
     rows.append(common.row("perf/faults/ratio", ratio, us_i))
     return rows
+
+
+def perf_journal_append() -> List[str]:
+    """Write-ahead-journal append cost on the policy hot path.
+
+    Same composite-gate technique as ``perf_fault_overhead``: the raw
+    per-append cost (in-memory and on-disk variants) is microbenchmarked
+    directly (low variance), scaled by the measured journal records per
+    pool lookup, and divided by the measured per-lookup cost — the gated
+    ``perf/journal/ratio`` row must stay <= 1.05x.  Raw appends are
+    emitted as ungated reference rows.
+    """
+    import os
+    import tempfile
+
+    from repro.core.prodcache import ProdClock2QPlus
+    from repro.faults import ShardJournal
+    from repro.obs import NullSink
+
+    n = 20_000
+
+    def append_us(directory) -> float:
+        best = float("inf")
+        for rep in range(5):
+            sub = None if directory is None else \
+                os.path.join(directory, f"r{rep}")
+            pol = ProdClock2QPlus(48, max_capacity=64, obs=NullSink())
+            jr = ShardJournal(sub).attach(pol)
+            t0 = time.perf_counter()
+            for i in range(n):
+                jr.on_io_done(i)
+            best = min(best, time.perf_counter() - t0)
+            jr.close()
+        return 1e6 * best / n
+
+    mem_us = append_us(None)
+    with tempfile.TemporaryDirectory() as d:
+        disk_us = append_us(d)
+
+    # journal records per pool lookup (the churny perf workload), and
+    # the per-lookup swap-path cost it dilutes into
+    rng = np.random.default_rng(11)
+    warm = rng.integers(0, 120, 1_500)
+    timed = rng.integers(0, 120, 4_000)
+    pool, zeros = _mk_pool()
+    jr = ShardJournal(None).attach(pool.policy)
+    _drive(pool, zeros, warm)
+    mark = jr.lsn
+    t0 = time.perf_counter()
+    _drive(pool, zeros, timed)
+    lookup_us = 1e6 * (time.perf_counter() - t0) / len(timed)
+    appends_per_lookup = (jr.lsn - mark) / len(timed)
+
+    ratio = (lookup_us + appends_per_lookup * mem_us) \
+        / max(1e-12, lookup_us)
+    return [common.row("perf/journal/append_mem", mem_us, n),
+            common.row("perf/journal/append_disk", disk_us, n),
+            common.row("perf/journal/ratio", ratio, appends_per_lookup)]
+
+
+def perf_failover_rto() -> List[str]:
+    """Failover recovery: standby promotion vs ghost-journal cold rewarm
+    on w01-skewed at 48k — wall RTO in the us column, post-failover
+    miss-ratio gap vs the uninjured run in the derived column.  The
+    promote row's gap is gated at exactly 0.0 (bit-exact state) in
+    baseline.json; the rewarm row is the ungated reference."""
+    import dataclasses as _dc
+
+    from repro.core import traces
+    from repro.faults import GhostJournal, ShardReplicator, failover
+    from repro.obs import NullSink
+    from repro.shardcache import ShardedClock2QPlus
+
+    spec = next(s for s in traces.SUITE if s.name == "w01-skewed")
+    trace = _dc.replace(spec, n=48_000).data()
+    chunk = 2048
+
+    def run(mode=None):
+        svc = ShardedClock2QPlus(2048, n_shards=4, max_capacity=4096,
+                                 obs=NullSink())
+        rep = gj = None
+        if mode == "promote":
+            rep = ShardReplicator(svc, None, lag_threshold=1 << 30)
+        elif mode == "rewarm":
+            gj = GhostJournal()
+        hits, rto, done = 0, 0.0, False
+        for lo in range(0, len(trace), chunk):
+            hits += int(svc.access_many(trace[lo:lo + chunk]).sum())
+            if gj is not None:
+                gj.capture(svc)
+            if rep is not None:
+                rep.poll()
+            if mode is not None and not done \
+                    and lo + chunk >= len(trace) // 2:
+                t0 = time.perf_counter()
+                if mode == "promote":
+                    rep.promote(1)
+                else:
+                    failover(svc, 1, gj)
+                rto = time.perf_counter() - t0
+                done = True
+        return hits / len(trace), rto
+
+    base, _ = run()
+    hr_p, rto_p = run("promote")
+    hr_r, rto_r = run("rewarm")
+    return [common.row("perf/failover/promote_rto", 1e6 * rto_p,
+                       abs(base - hr_p)),
+            common.row("perf/failover/rewarm_rto", 1e6 * rto_r,
+                       abs(base - hr_r))]

@@ -36,6 +36,8 @@ BENCHES = [
     ("perf_cpu", perf.perf_cpu_overhead),
     ("perf_obs", perf.perf_obs_overhead),
     ("perf_faults", faults.perf_fault_overhead),
+    ("perf_journal", faults.perf_journal_append),
+    ("perf_failover", faults.perf_failover_rto),
     ("perf_sched_tick", serving.perf_sched_tick),
     ("perf_sweep_grid", tuning.perf_sweep_grid),
     ("perf_shard_scalability", shard.perf_shard_scalability),

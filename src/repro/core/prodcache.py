@@ -184,6 +184,13 @@ class ProdClock2QPlus:
             "resident entries (set at snapshot time)").labels(lbl)
         obs.on_collect(self._obs_collect)
 
+        # write-ahead delta journal hook (repro.faults.journal attaches
+        # one via ShardJournal.attach; None keeps every hot path at a
+        # single attribute test, same bargain as ``if ring.enabled``)
+        self._journal = None
+        self._in_retune = False  # retune() journals ONE record; its
+        # internal begin_resize call must not add a second
+
         # cursors / logical sizes
         self.spos = 0
         self.hand = 0
@@ -278,7 +285,17 @@ class ProdClock2QPlus:
         if window_frac is not None:
             self._window_frac = window_frac
         old_window = self.window
-        self.begin_resize(self.capacity)
+        jr = self._journal
+        if jr is not None:
+            # journal the retune as ONE record of absolute post-values;
+            # the embedded begin_resize is its deterministic consequence
+            jr.on_retune(self._small_frac, self._ghost_frac,
+                         self._window_frac)
+        self._in_retune = True
+        try:
+            self.begin_resize(self.capacity)
+        finally:
+            self._in_retune = False
         if self._ring.enabled:
             self._ring.emit(EV_RETUNE, self.shard_id, a=old_window,
                             b=self.window)
@@ -495,8 +512,12 @@ class ProdClock2QPlus:
                 self._c_io_wait.value += 1
                 if self._ring.enabled:
                     self._ring.emit(EV_IO_WAIT, self.shard_id, a=key)
-            return AccessResult(True, int(self.block[eid]),
-                                io_pending=bool(self.io[eid]))
+            res = AccessResult(True, int(self.block[eid]),
+                               io_pending=bool(self.io[eid]))
+            jr = self._journal
+            if jr is not None:
+                jr.on_access(key, dirty, pin, res)
+            return res
 
         self._c_miss.value += 1
         gslot = self._ghost_lookup(key)
@@ -532,8 +553,12 @@ class ProdClock2QPlus:
         if pin:
             self.pin[eid] += 1
         ek, eb = self._last_evicted
-        return AccessResult(False, block, evicted_key=ek, evicted_block=eb,
-                            bypassed_to_main=bypass, io_pending=True)
+        res = AccessResult(False, block, evicted_key=ek, evicted_block=eb,
+                           bypassed_to_main=bypass, io_pending=True)
+        jr = self._journal
+        if jr is not None:
+            jr.on_access(key, dirty, pin, res)
+        return res
 
     def io_done(self, key: int) -> None:
         eid = self._hash_lookup(key)
@@ -541,6 +566,9 @@ class ProdClock2QPlus:
             eid = self._find_stray(key)
         if eid != EMPTY:
             self.io[eid] = False
+        jr = self._journal
+        if jr is not None:
+            jr.on_io_done(key)
 
     def unpin(self, key: int) -> None:
         eid = self._hash_lookup(key)
@@ -548,6 +576,9 @@ class ProdClock2QPlus:
             eid = self._find_stray(key)
         if eid != EMPTY and self.pin[eid] > 0:
             self.pin[eid] -= 1
+        jr = self._journal
+        if jr is not None:
+            jr.on_unpin(key)
 
     def clean(self, key: int) -> None:
         """Mark a dirty block flushed (host copy completed)."""
@@ -556,6 +587,9 @@ class ProdClock2QPlus:
             eid = self._find_stray(key)
         if eid != EMPTY:
             self.dirty[eid] = False
+        jr = self._journal
+        if jr is not None:
+            jr.on_clean(key)
 
     def set_dirty(self, key: int) -> None:
         """Mark resident block dirty without touching replacement state."""
@@ -564,6 +598,9 @@ class ProdClock2QPlus:
             eid = self._find_stray(key)
         if eid != EMPTY:
             self.dirty[eid] = True
+        jr = self._journal
+        if jr is not None:
+            jr.on_set_dirty(key)
 
     def contains(self, key: int) -> bool:
         return self._hash_lookup(key) != EMPTY or self._find_stray(key) != EMPTY
@@ -664,6 +701,9 @@ class ProdClock2QPlus:
         ``resize_step`` migrate entries in the background.  If a previous
         resize's hash migration is still pending it is completed first
         (two old bucket arrays cannot coexist)."""
+        jr = self._journal
+        if jr is not None and not self._in_retune:
+            jr.on_resize(new_capacity)
         self.finish_rehash()
         if self._ring.enabled:
             self._ring.emit(EV_RESIZE, self.shard_id, a=self.capacity,
@@ -704,6 +744,9 @@ class ProdClock2QPlus:
         """Background-thread analogue: migrate up to ``n_entries`` from the
         old hash location and drain out-of-bounds slots.  Returns True when
         the resize is complete."""
+        jr = self._journal
+        if jr is not None:
+            jr.on_resize_step(n_entries)
         done_hash = self._rehash_step(n_entries)
         done_drain = self._drain_out_of_bounds(n_entries)
         return done_hash and done_drain

@@ -16,7 +16,15 @@ Four pieces, layered bottom-up (each importable alone):
     riding the checkpoint store;
   * ``recovery`` — shard failover: a ``GhostJournal`` of per-shard key
     metadata rebuilds a lost shard's working set through the normal
-    ghost-promotion path before it rejoins rebalancing.
+    ghost-promotion path before it rejoins rebalancing;
+  * ``journal``  — the append-only write-ahead delta journal
+    (``ShardJournal``): CRC-per-record segments with monotonic LSNs,
+    torn-tail truncating ``recover``, and base-snapshot compaction —
+    every policy mutation is replayable bit-exactly;
+  * ``replica``  — hot-standby replication over the journal
+    (``ShardReplica`` / ``ShardReplicator``): bounded-staleness shard
+    mirrors that ``promote()`` on shard loss instead of cold-rewarming,
+    falling back to the ghost rewarm only past the lag threshold.
 
 Layering: ``repro.faults`` sits beside the policy engines (layer 2) and
 may import only ``repro.core`` and ``repro.obs``; the pool/serving
@@ -29,12 +37,19 @@ checkpoint store only when used).
 from repro.faults.io import (  # noqa: F401
     CircuitBreaker, Clock, HostIO, IOResult, RetryPolicy,
 )
+from repro.faults.journal import (  # noqa: F401
+    JournalCrash, JRecord, RecoveryResult, ReplayDivergence, ShardJournal,
+    apply_record, recover,
+)
 from repro.faults.plan import (  # noqa: F401
-    FAULT_NAMES, IO_DELAY, IO_ERROR, OP_ANY, OP_SWAP_IN, OP_SWAP_OUT,
-    PARTIAL_WRITE, SHARD_LOSS, Fault, FaultPlan, FaultSpec, NullPlan,
-    splitmix64,
+    CRASH, FAULT_NAMES, IO_DELAY, IO_ERROR, OP_ANY, OP_JOURNAL_APPEND,
+    OP_SWAP_IN, OP_SWAP_OUT, PARTIAL_WRITE, SHARD_LOSS, Fault, FaultPlan,
+    FaultSpec, NullPlan, splitmix64,
 )
 from repro.faults.recovery import GhostJournal, failover  # noqa: F401
+from repro.faults.replica import (  # noqa: F401
+    PromoteResult, ShardReplica, ShardReplicator,
+)
 from repro.faults.snapshot import (  # noqa: F401
     MAGIC, VERSION, SnapshotManager, load_state_dict, pack,
     policy_from_snapshot, read_snapshot, state_dict, unpack,
@@ -43,10 +58,14 @@ from repro.faults.snapshot import (  # noqa: F401
 
 __all__ = [
     "CircuitBreaker", "Clock", "HostIO", "IOResult", "RetryPolicy",
-    "FAULT_NAMES", "IO_DELAY", "IO_ERROR", "OP_ANY", "OP_SWAP_IN",
-    "OP_SWAP_OUT", "PARTIAL_WRITE", "SHARD_LOSS", "Fault", "FaultPlan",
-    "FaultSpec", "NullPlan", "splitmix64",
+    "CRASH", "FAULT_NAMES", "IO_DELAY", "IO_ERROR", "OP_ANY",
+    "OP_JOURNAL_APPEND", "OP_SWAP_IN", "OP_SWAP_OUT", "PARTIAL_WRITE",
+    "SHARD_LOSS", "Fault", "FaultPlan", "FaultSpec", "NullPlan",
+    "splitmix64",
     "GhostJournal", "failover",
+    "JournalCrash", "JRecord", "RecoveryResult", "ReplayDivergence",
+    "ShardJournal", "apply_record", "recover",
+    "PromoteResult", "ShardReplica", "ShardReplicator",
     "MAGIC", "VERSION", "SnapshotManager", "load_state_dict", "pack",
     "policy_from_snapshot", "read_snapshot", "state_dict", "unpack",
     "write_snapshot",

@@ -33,17 +33,23 @@ IO_ERROR = 1        # the host-block IO fails (retryable)
 IO_DELAY = 2        # latency spike: the op stalls for `ticks`
 PARTIAL_WRITE = 3   # swap-out persists a torn block (detected on read)
 SHARD_LOSS = 4      # a whole shard's state vanishes (process/node death)
+CRASH = 5           # the process dies mid-write (journal crash-point
+                    # fuzzing: `ticks` is reused as the byte offset into
+                    # the record that made it to disk before the kill)
 
 FAULT_NAMES = {
     IO_ERROR: "io_error",
     IO_DELAY: "io_delay",
     PARTIAL_WRITE: "partial_write",
     SHARD_LOSS: "shard_loss",
+    CRASH: "crash",
 }
 
-# op kinds a spec can target (the pool's host-block IO surface)
+# op kinds a spec can target (the pool's host-block IO surface, plus the
+# journal's append stream for CRASH_AT crash-point specs)
 OP_SWAP_IN = "swap_in"
 OP_SWAP_OUT = "swap_out"
+OP_JOURNAL_APPEND = "journal_append"
 OP_ANY = "*"
 
 _MASK64 = 0xFFFFFFFFFFFFFFFF

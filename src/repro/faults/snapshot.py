@@ -38,7 +38,8 @@ import numpy as np
 from repro.obs import EV_RESTORE
 
 MAGIC = b"C2QSNAP1"
-VERSION = 1
+VERSION = 2   # newest format this module can read/write
+_V1 = 1       # plain engine-state snapshots (no journal linkage)
 
 # meta keys restored as plain attributes of a ProdClock2QPlus
 _PROD_SCALARS = (
@@ -60,7 +61,7 @@ def _is_sharded(cache) -> bool:
 
 def _prod_state(pol) -> Dict:
     meta = {k: getattr(pol, k) for k in _PROD_SCALARS}
-    meta.update(version=VERSION, kind="prod",
+    meta.update(version=_V1, kind="prod",
                 rehash_cursor=pol._rehash_cursor,
                 small_frac=pol._small_frac, ghost_frac=pol._ghost_frac,
                 window_frac=pol._window_frac)
@@ -71,16 +72,28 @@ def _prod_state(pol) -> Dict:
     return {"meta": meta, "arrays": arrays}
 
 
-def state_dict(cache) -> Dict:
+def state_dict(cache, journal_meta=None) -> Dict:
     """Point-in-time plain-data state of a cache.
 
     For a sharded service every shard lock is held while its shard is
     captured AND the facade scalars are read, so the snapshot is a
     crash-consistent cut: no access can interleave with the capture.
+
+    ``journal_meta=(epoch, lsn)`` stamps the snapshot as a v2 journal
+    *base*: the meta additionally records the write-ahead journal epoch
+    and the last LSN folded into this state, so recovery knows exactly
+    where journal replay must resume (``repro.faults.journal``).
+    Without it the output is a plain v1 snapshot, byte-identical to what
+    earlier readers pin.
     """
-    if not _is_sharded(cache):
-        return _prod_state(cache)
-    meta = {"version": VERSION, "kind": "sharded",
+    d = _prod_state(cache) if not _is_sharded(cache) else None
+    if d is not None:
+        if journal_meta is not None:
+            epoch, lsn = journal_meta
+            d["meta"].update(version=VERSION, journal_epoch=int(epoch),
+                             journal_lsn=int(lsn))
+        return d
+    meta = {"version": _V1, "kind": "sharded",
             "n_shards": cache.n_shards, "capacity": cache.capacity,
             "max_capacity": cache.max_capacity,
             "shard_max": cache.shard_max, "stride": cache.stride,
@@ -93,6 +106,10 @@ def state_dict(cache) -> Dict:
         meta[f"s{i}"] = sub["meta"]
         for name, arr in sub["arrays"].items():
             arrays[f"s{i}/{name}"] = arr
+    if journal_meta is not None:
+        epoch, lsn = journal_meta
+        meta.update(version=VERSION, journal_epoch=int(epoch),
+                    journal_lsn=int(lsn))
     return {"meta": meta, "arrays": arrays}
 
 
@@ -173,9 +190,11 @@ def load_state_dict(cache, d: Dict, step: int = -1) -> None:
         obs.emit(EV_RESTORE, a=step, b=n)
 
 
-def policy_from_snapshot(d: Dict):
+def policy_from_snapshot(d: Dict, obs=None):
     """Cold restore: construct a fresh ``ProdClock2QPlus`` shaped like
-    the snapshot (same preallocated maxima), then load the state."""
+    the snapshot (same preallocated maxima), then load the state.
+    ``obs`` overrides the new instance's sink (a ``NullSink`` keeps a
+    replica mirror telemetry-free)."""
     from repro.core.prodcache import ProdClock2QPlus
 
     meta = d["meta"]
@@ -193,16 +212,16 @@ def policy_from_snapshot(d: Dict):
         max_small_frac=meta["max_small"] / mc,
         max_ghost_frac=meta["max_ghost"] / mc,
         min_small_frac=max(0.0, mc - meta["max_main"]) / mc,
-        shard_id=meta["shard_id"])
+        shard_id=meta["shard_id"], obs=obs)
     load_state_dict(pol, d)
     return pol
 
 
-# -- the on-disk byte format (v1) ----------------------------------------------
+# -- the on-disk byte format (v1/v2) -------------------------------------------
 #
 #   offset  size  field
 #        0     8  magic  b"C2QSNAP1"
-#        8     4  u32 version (=1), little-endian (as are all ints below)
+#        8     4  u32 version (1 or 2), little-endian (as are all ints below)
 #       12     4  u32 n_arrays
 #       16     8  u64 meta_len
 #       24     .  meta: canonical JSON (sorted keys, compact separators),
@@ -219,6 +238,12 @@ def policy_from_snapshot(d: Dict):
 # meta keys), adding/renaming arrays or changing any encoding bumps the
 # version.  tests/test_faults.py pins the layout byte-for-byte against
 # tests/golden/c2qp_snapshot_v1.bin.
+#
+# v2 (journal bases): identical encoding; the meta additionally carries
+# ``journal_epoch`` + ``journal_lsn`` — the write-ahead-journal position
+# this state is a prefix fold of (``repro.faults.journal``).  Plain
+# captures keep writing version 1, so the v1 golden stays byte-exact;
+# tests/golden/c2qp_snapshot_v2.bin pins the v2 layout.
 
 def _canon_meta(meta: Dict) -> bytes:
     return json.dumps(meta, sort_keys=True,
@@ -226,7 +251,9 @@ def _canon_meta(meta: Dict) -> bytes:
 
 
 def pack(d: Dict) -> bytes:
-    """Serialize a ``state_dict`` to the versioned v1 byte format.
+    """Serialize a ``state_dict`` to the versioned byte format (the
+    header version field mirrors ``meta["version"]``: 1 for plain state,
+    2 for journal-base snapshots carrying epoch/LSN meta).
 
     Fully deterministic: the same engine state always packs to the same
     bytes (canonical JSON meta, name-sorted little-endian arrays,
@@ -235,7 +262,8 @@ def pack(d: Dict) -> bytes:
     """
     meta_b = _canon_meta(d["meta"])
     arrays = d["arrays"]
-    out = [MAGIC, struct.pack("<II", VERSION, len(arrays)),
+    version = int(d["meta"].get("version", VERSION))
+    out = [MAGIC, struct.pack("<II", version, len(arrays)),
            struct.pack("<Q", len(meta_b)), meta_b]
     for name in sorted(arrays):
         arr = np.ascontiguousarray(arrays[name])
@@ -254,8 +282,8 @@ def pack(d: Dict) -> bytes:
 
 
 def unpack(buf: bytes) -> Dict:
-    """Parse v1 snapshot bytes back into a ``state_dict`` (verifying the
-    magic, version, and trailing digest)."""
+    """Parse snapshot bytes (v1 or v2) back into a ``state_dict``
+    (verifying the magic, version, and trailing digest)."""
     if len(buf) < len(MAGIC) + 36 or buf[:8] != MAGIC:
         raise ValueError("not a Clock2Q+ snapshot (bad magic)")
     payload, digest = buf[:-20], buf[-20:]
@@ -291,17 +319,41 @@ def unpack(buf: bytes) -> Dict:
     return {"meta": meta, "arrays": arrays}
 
 
-def write_snapshot(path: str, cache) -> bytes:
-    """Capture ``cache`` and atomically write the packed snapshot to
-    ``path`` (write-to-temp + rename: a crash mid-write never leaves a
-    torn snapshot where a restore might find it).  Returns the bytes."""
-    buf = pack(state_dict(cache))
+def _fsync_dir(path: str) -> None:
+    """fsync a directory so a rename/create inside it is itself durable
+    (a crashed host may otherwise forget the rename even though the file
+    contents were fsync'd).  No-op where directories can't be opened."""
+    try:
+        fd = os.open(path or ".", os.O_RDONLY)
+    except OSError:
+        return  # e.g. non-POSIX: directory fsync unsupported
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _atomic_write(path: str, buf: bytes) -> None:
+    """Write ``buf`` to ``path`` crash-durably: temp file + fsync +
+    rename + parent-directory fsync (the rename itself must survive a
+    crash, not just the bytes)."""
     tmp = f"{path}.tmp.{os.getpid()}"
     with open(tmp, "wb") as f:
         f.write(buf)
         f.flush()
         os.fsync(f.fileno())
     os.replace(tmp, path)
+    _fsync_dir(os.path.dirname(path))
+
+
+def write_snapshot(path: str, cache, journal_meta=None) -> bytes:
+    """Capture ``cache`` and atomically write the packed snapshot to
+    ``path`` (write-to-temp + fsync + rename + directory fsync: a crash
+    mid-write never leaves a torn snapshot where a restore might find
+    it, and the rename itself is durable).  ``journal_meta=(epoch,
+    lsn)`` writes a v2 journal-base snapshot.  Returns the bytes."""
+    buf = pack(state_dict(cache, journal_meta=journal_meta))
+    _atomic_write(path, buf)
     return buf
 
 

@@ -24,7 +24,7 @@ import numpy as np
 
 from repro import obs as obs_mod
 from repro.core.prodcache import EMPTY, ProdClock2QPlus, drive_resize
-from repro.faults import GhostJournal, HostIO, splitmix64
+from repro.faults import GhostJournal, HostIO, ShardReplicator, splitmix64
 from repro.faults.recovery import failover as _failover
 from repro.models.config import ModelConfig
 from repro.shardcache import ShardedClock2QPlus
@@ -53,7 +53,10 @@ class BlockPool:
                  window_frac: float = 0.5, max_hbm_blocks: int = 0,
                  n_shards: int = 0, rebalance_headroom: float = 1.0,
                  autotune=False, faults=None, io_retry=None,
-                 journal_every: int = 1024, obs=None):
+                 journal_every: int = 1024, replicate: bool = False,
+                 journal_dir: Optional[str] = None,
+                 lag_threshold: int = 4096, replica_poll: int = 256,
+                 obs=None):
         self.cfg = cfg
         self.bs = block_size
         self.n_blocks = n_hbm_blocks
@@ -143,6 +146,23 @@ class BlockPool:
                 lambda: g_deg.set(1.0 if self._io.degraded else 0.0))
             if hasattr(self.policy, "shards"):
                 self._journal = GhostJournal(self.policy)
+        # hot-standby replication (repro.faults.replica): a write-ahead
+        # delta journal per shard plus a bounded-staleness standby that
+        # tails it, polled from the lookup path every ``replica_poll``
+        # lookups.  On shard loss, failover_shard() promotes the standby
+        # (exact state, no synthetic re-accesses) while its lag is
+        # within ``lag_threshold``; past it, the ghost rewarm above is
+        # the fallback.  journal_dir=None replicates in memory.
+        self._replicator: Optional[ShardReplicator] = None
+        self.replica_poll = replica_poll
+        if replicate:
+            if not hasattr(self.policy, "shards"):
+                raise ValueError("replicate= needs a sharded policy "
+                                 "(n_shards > 1)")
+            self._replicator = ShardReplicator(
+                self.policy, journal_dir, lag_threshold=lag_threshold,
+                clock=self._io.clock if self._io is not None else None,
+                obs=self.obs)
         # autotune=True (defaults) or a dict of OnlineTuner kwargs: the
         # tuner observes the block-key stream through lookup() and
         # retargets the policy's window / queue fractions online via the
@@ -180,13 +200,16 @@ class BlockPool:
         caller refills from the origin exactly as for a cold miss.
         ``tenant`` additionally attributes the lookup to a serving
         tenant (``pool_tenant_lookups_total{tenant,result}``)."""
-        if self._io is not None:
+        if self._io is not None or self._replicator is not None:
             self._lookups += 1
-            if self._io.pending_shard_loss:
+            if self._io is not None and self._io.pending_shard_loss:
                 self._drain_shard_loss()
             if self._journal is not None and \
                     self._lookups % self.journal_every == 0:
                 self._journal.capture(self.policy)
+            if self._replicator is not None and \
+                    self._lookups % self.replica_poll == 0:
+                self._replicator.poll()
         if self.tuner is not None:
             self.tuner.observe(key)
         r = self.policy.access(key, pin=pin)
@@ -336,16 +359,32 @@ class BlockPool:
         on the uninstrumented path."""
         return self._io is not None and self._io.degraded
 
+    def replication_lag(self, sid: int) -> int:
+        """Standby lag for shard ``sid`` in journal records (0 when
+        replication is off)."""
+        return self._replicator.lag(sid) if self._replicator else 0
+
     def failover_shard(self, sid: int) -> Tuple[int, int]:
-        """Lose shard ``sid`` and rebuild its working set from the ghost
-        journal (``repro.faults.recovery.failover``).  Readmitted keys
-        whose payloads survive in the host tier are refilled directly
-        (the recovery scan reads local copies, not the faulted swap
-        path); the rest are seeded into the ghost ring and refill from
-        origin on their next touch.  Returns (residents, ghosts)."""
-        if self._journal is None:
-            raise RuntimeError("failover needs faults= and a sharded "
-                               "policy (n_shards > 1)")
+        """Lose shard ``sid`` and rebuild it.
+
+        With replication armed (``replicate=True``) and the standby's
+        lag within threshold, the standby is *promoted*: the journal
+        tail is replayed past its applied LSN, its exact replacement
+        state is loaded into the fresh shard, and only payloads refill
+        — no synthetic re-accesses (``repro.faults.replica``).  A
+        too-stale standby (or no replication) falls back to the ghost-
+        journal rewarm (``repro.faults.recovery.failover``), after
+        which the shard's journal is reattached at the next epoch so
+        replication resumes.  Either way, readmitted keys whose
+        payloads survive in the host tier are refilled directly (the
+        recovery scan reads local copies, not the faulted swap path);
+        the rest end up in the ghost ring and refill from origin on
+        their next touch.  Returns (residents, ghosts) for rewarm,
+        (refilled, demoted) for promotion.
+        """
+        if self._journal is None and self._replicator is None:
+            raise RuntimeError("failover needs faults= (or replicate=) "
+                               "and a sharded policy (n_shards > 1)")
         base = sid * self.policy.stride
 
         def fill(key):
@@ -353,7 +392,19 @@ class BlockPool:
                 return None
             return lambda local: self._copy_in(key, base + local)
 
-        return _failover(self.policy, sid, self._journal, fill=fill)
+        rep = self._replicator
+        if rep is not None and rep.should_promote(sid):
+            res = rep.promote(sid, fill=fill)
+            return (res.refilled, res.demoted)
+        if self._journal is None:
+            raise RuntimeError("standby for shard %d is %d records "
+                               "stale (threshold %d) and no ghost "
+                               "journal is armed (faults=)"
+                               % (sid, rep.lag(sid), rep.lag_threshold))
+        out = _failover(self.policy, sid, self._journal, fill=fill)
+        if rep is not None:
+            rep.reattach(sid)  # resume journaling the rewarmed shard
+        return out
 
     def _drain_shard_loss(self) -> None:
         """Apply SHARD_LOSS faults the plan injected on the IO stream.

@@ -14,10 +14,11 @@ serving) — see tools/check_layering.py.
 
 from repro.obs.events import (  # noqa: F401
     EV_ADMIT, EV_BATCH, EV_DEGRADED, EV_EVICT, EV_FAULT, EV_GHOST_PROMOTE,
-    EV_IO_ERROR, EV_IO_RETRY, EV_IO_WAIT, EV_REBALANCE, EV_REJECT,
-    EV_RESIZE, EV_RESIZE_DONE, EV_RESTORE, EV_RETUNE, EV_SHARD_LOST,
-    EV_SHARD_REWARM, EV_SHED, EV_SNAPSHOT, EV_WINDOW_ENTER, EV_WINDOW_EXIT,
-    EVENT_NAMES, INCIDENT_KINDS, EventRing, NullRing,
+    EV_IO_ERROR, EV_IO_RETRY, EV_IO_WAIT, EV_JOURNAL_TRUNCATED,
+    EV_PROMOTE, EV_REBALANCE, EV_REJECT, EV_RESIZE, EV_RESIZE_DONE,
+    EV_RESTORE, EV_RETUNE, EV_SHARD_LOST, EV_SHARD_REWARM, EV_SHED,
+    EV_SNAPSHOT, EV_WINDOW_ENTER, EV_WINDOW_EXIT, EVENT_NAMES,
+    INCIDENT_KINDS, EventRing, NullRing,
 )
 from repro.obs.export import (  # noqa: F401
     NullSink, ObsSink, Snapshot, delta, merge, snapshot, to_prometheus,

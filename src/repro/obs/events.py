@@ -49,6 +49,12 @@ EV_SHARD_LOST = 15      # shard=sid, a=resident entries lost
 EV_SHARD_REWARM = 16    # shard=sid, a=residents readmitted, b=ghosts
 EV_RESTORE = 17         # a=snapshot step restored, b=resident entries
 
+# write-ahead journal / hot-standby replication vocabulary
+# (repro.faults.journal / repro.faults.replica)
+EV_JOURNAL_TRUNCATED = 22  # shard=sid, a=last durable LSN, b=torn bytes cut
+EV_PROMOTE = 23            # shard=sid, a=journal records replayed, b=lag
+                           # (LSNs the standby was behind at loss)
+
 # serving-scheduler vocabulary (repro.serving.scheduler).  The scheduler
 # runs on a virtual tick clock, so `shard` carries the tick the decision
 # was made at — the events ARE the schedule, and the simulation-test
@@ -76,6 +82,8 @@ EVENT_NAMES: Dict[int, str] = {
     EV_SHARD_LOST: "shard_lost",
     EV_SHARD_REWARM: "shard_rewarm",
     EV_RESTORE: "restore",
+    EV_JOURNAL_TRUNCATED: "journal_truncated",
+    EV_PROMOTE: "promote",
     EV_ADMIT: "admit",
     EV_REJECT: "reject",
     EV_SHED: "shed",
@@ -88,7 +96,7 @@ EVENT_NAMES: Dict[int, str] = {
 INCIDENT_KINDS = frozenset((
     "fault_inject", "io_retry", "io_error", "degraded", "shard_lost",
     "shard_rewarm", "restore", "rebalance", "resize", "resize_done",
-    "shed", "reject",
+    "shed", "reject", "journal_truncated", "promote",
 ))
 
 

@@ -72,7 +72,8 @@ class ServingEngine:
                  hbm_blocks: int = 64, max_batch: int = 8,
                  max_blocks_per_seq: int = 64, n_shards: int = 0,
                  max_hbm_blocks: int = 0, rebalance_headroom: float = 1.0,
-                 autotune=False, faults=None, io_retry=None, obs=None):
+                 autotune=False, faults=None, io_retry=None,
+                 replicate: bool = False, journal_dir=None, obs=None):
         assert api.cfg.family in ("dense", "vlm", "moe"), \
             "paged serving targets the attention-KV families"
         self.api = api
@@ -88,13 +89,17 @@ class ServingEngine:
         # host-IO swap path; under sustained IO failure the pool sheds to
         # read-through and the engine keeps answering (misses refill from
         # prefill), with queue depth still bounded by max_batch.
+        # replicate= arms per-shard write-ahead journaling + hot-standby
+        # replication (journal_dir=None keeps it in memory): shard loss
+        # then promotes the standby instead of cold-rewarming.
         self.pool = BlockPool(api.cfg, hbm_blocks, block_size,
                               dtype=jnp.dtype(api.cfg.dtype),
                               n_shards=n_shards,
                               max_hbm_blocks=max_hbm_blocks,
                               rebalance_headroom=rebalance_headroom,
                               autotune=autotune, faults=faults,
-                              io_retry=io_retry)
+                              io_retry=io_retry, replicate=replicate,
+                              journal_dir=journal_dir)
         self.mgr = PagedKVManager(api.cfg, self.pool)
         self.max_batch = max_batch
         self.max_blocks = max_blocks_per_seq

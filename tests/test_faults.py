@@ -30,6 +30,7 @@ from repro.obs import INCIDENT_KINDS, NullSink, ObsSink
 from repro.shardcache import ShardedClock2QPlus
 
 GOLDEN = pathlib.Path(__file__).parent / "golden" / "c2qp_snapshot_v1.bin"
+GOLDEN_V2 = pathlib.Path(__file__).parent / "golden" / "c2qp_snapshot_v2.bin"
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
                        / "tools"))
 
@@ -420,6 +421,49 @@ def test_snapshot_golden_bytes():
     # the pinned bytes restore to a working engine
     pol = policy_from_snapshot(unpack(golden))
     assert len(pol) > 0 and pol.access(7).hit in (True, False)
+
+
+def test_snapshot_v2_golden_bytes():
+    """v2 = journal base: same encoding, meta additionally carries the
+    journal epoch + last folded LSN.  Pinned byte-for-byte, alongside
+    (not instead of) the v1 golden — plain captures must keep writing
+    v1 so old readers stay compatible."""
+    buf = pack(state_dict(_golden_policy(), journal_meta=(3, 1234)))
+    golden = GOLDEN_V2.read_bytes()
+    assert golden[:8] == b"C2QSNAP1"
+    version, n_arrays = struct.unpack_from("<II", golden, 8)
+    assert version == 2 and n_arrays == 13
+    (meta_len,) = struct.unpack_from("<Q", golden, 16)
+    meta = golden[24:24 + meta_len]
+    assert b'"version":2' in meta
+    assert b'"journal_epoch":3' in meta and b'"journal_lsn":1234' in meta
+    assert buf == golden
+    # v2 reads back with the journal position intact, and restores
+    d = unpack(golden)
+    assert d["meta"]["journal_epoch"] == 3
+    assert d["meta"]["journal_lsn"] == 1234
+    pol = policy_from_snapshot(d)
+    assert pack(state_dict(pol)) == pack(state_dict(_golden_policy()))
+
+
+def test_write_snapshot_fsyncs_parent_directory(tmp_path, monkeypatch):
+    """Durability: the rename that publishes a snapshot is only durable
+    once the parent directory is fsynced — assert write_snapshot fsyncs
+    a directory fd, not just the file."""
+    import os
+    synced_dirs = []
+    real_fsync = os.fsync
+    real_fstat = os.fstat
+
+    def spy_fsync(fd):
+        import stat
+        if stat.S_ISDIR(real_fstat(fd).st_mode):
+            synced_dirs.append(fd)
+        return real_fsync(fd)
+
+    monkeypatch.setattr(os, "fsync", spy_fsync)
+    write_snapshot(str(tmp_path / "s.c2qsnap"), _warm_policy())
+    assert synced_dirs, "parent directory was not fsynced after replace"
 
 
 # =============================================================================

@@ -1,0 +1,436 @@
+"""Crash-point recovery fuzzing for the write-ahead delta journal
+(repro.faults.journal) and hot-standby replication (repro.faults.replica).
+
+The acceptance pillars from the issue:
+
+  * kill the journal writer at EVERY record boundary and at random byte
+    offsets inside records; recovery must restore state bit-exact up to
+    the last durable LSN, detect + truncate the torn tail, and never
+    silently apply a torn record;
+  * a CRASH FaultSpec on the journal's append stream (``ticks`` = bytes
+    that reached disk) reproduces the same mid-record kills in-process;
+  * journal apply is idempotent and replay is deterministic: any prefix
+    applied twice, or a replica resuming mid-stream, yields the same
+    shard state byte-for-byte (hypothesis when available, seeded
+    fallback otherwise — same sampler either way);
+  * post-failover miss-ratio parity: replica promotion strictly beats
+    PR 8's ghost-journal cold rewarm on the SUITE traces at 48k.
+"""
+
+import glob
+import hashlib
+import os
+import shutil
+
+import numpy as np
+import pytest
+
+from repro.core.prodcache import ProdClock2QPlus
+from repro.faults import (
+    CRASH, OP_JOURNAL_APPEND, FaultPlan, FaultSpec, GhostJournal,
+    JournalCrash, ShardJournal, ShardReplica, ShardReplicator, failover,
+    pack, recover, state_dict,
+)
+from repro.faults.journal import RECORD_SIZE, _SEG_HDR_SIZE
+from repro.obs import EV_JOURNAL_TRUNCATED, EV_PROMOTE, NullSink, ObsSink
+from repro.shardcache import ShardedClock2QPlus
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+_MASK = (1 << 64) - 1
+
+
+def _digest(pol) -> str:
+    return hashlib.sha1(pack(state_dict(pol))).hexdigest()
+
+
+def _mk_policy():
+    return ProdClock2QPlus(48, max_capacity=64, obs=NullSink())
+
+
+def _drive(pol, n=200, seed=0x243F6A8885A308D3, each=None):
+    """Deterministic mixed-op command stream covering every journaled
+    op kind (access with dirty/pin, io_done, unpin, clean, set_dirty,
+    retune, begin_resize, resize_step).  ``each()`` runs after every
+    single policy call — exactly one journal record per call."""
+    step = each if each is not None else (lambda: None)
+    x = seed & _MASK
+    for i in range(n):
+        x = (x * 6364136223846793005 + 1442695040888963407) & _MASK
+        k = (x >> 33) % 160
+        r = pol.access(k, dirty=(i % 11 == 0), pin=(i % 17 == 0))
+        step()
+        if not r.hit:
+            pol.io_done(k)
+            step()
+        if i % 17 == 0:
+            pol.unpin(k)
+            step()
+        if i % 23 == 0:
+            pol.clean(k)
+            step()
+        if i % 29 == 0:
+            pol.set_dirty(k)
+            step()
+        if i % 97 == 0:
+            pol.retune(window_frac=0.05 + (i % 3) * 0.05)
+            step()
+        if i % 61 == 0:
+            pol.begin_resize(32 + (i % 33))
+            step()
+            while True:
+                done = pol.resize_step(16)
+                step()
+                if done:
+                    break
+
+
+# =============================================================================
+# Crash-point fuzz: every record boundary + random intra-record offsets
+# =============================================================================
+
+def _journaled_run(directory, segment_records=64):
+    """Drive a journaled policy, recording the state digest at every
+    LSN.  Returns (per-LSN digests, final LSN)."""
+    pol = _mk_policy()
+    jr = ShardJournal(directory, segment_records=segment_records)
+    jr.attach(pol)
+    hashes = {jr.lsn: _digest(pol)}
+    _drive(pol, each=lambda: hashes.__setitem__(jr.lsn, _digest(pol)))
+    jr.close()
+    return hashes, jr.lsn
+
+
+def _seg_start(path):
+    stem = os.path.basename(path)[len("seg-"):-len(".c2qj")]
+    return int(stem.split("-")[1])
+
+
+def _crash_copy(src, dst, upto, extra=0):
+    """Copy a journal directory as a crash at LSN boundary ``upto``
+    would have left it: records 1..upto fully durable, plus ``extra``
+    bytes of record upto+1 (a torn tail when 0 < extra < RECORD_SIZE)."""
+    shutil.copytree(src, dst)
+    for path in sorted(glob.glob(os.path.join(dst, "seg-*.c2qj")),
+                       key=_seg_start):
+        s = _seg_start(path)
+        n = (os.path.getsize(path) - _SEG_HDR_SIZE) // RECORD_SIZE
+        if n and s + n - 1 <= upto:
+            continue  # every record of this segment is durable
+        if s > upto + 1:
+            os.unlink(path)  # the writer never got this far
+        elif s == upto + 1:
+            # crash right after rotation: header (+ torn bytes) only
+            os.truncate(path, _SEG_HDR_SIZE + extra)
+        else:
+            os.truncate(path, _SEG_HDR_SIZE
+                        + (upto - s + 1) * RECORD_SIZE + extra)
+
+
+def test_crash_at_every_record_boundary(tmp_path):
+    src = tmp_path / "journal"
+    hashes, total = _journaled_run(str(src))
+    assert total > 300  # the driver exercised a real op mix
+    for k in range(total + 1):
+        dst = tmp_path / f"b{k}"
+        _crash_copy(str(src), str(dst), k)
+        res = recover(str(dst))
+        assert res.lsn == k and res.truncated_bytes == 0
+        assert _digest(res.policy) == hashes[k], \
+            f"state diverges after clean recovery at LSN {k}"
+        shutil.rmtree(dst)
+
+
+def test_crash_at_random_intra_record_offsets(tmp_path):
+    src = tmp_path / "journal"
+    hashes, total = _journaled_run(str(src))
+    rng = np.random.default_rng(7)
+    for i in range(200):
+        k = int(rng.integers(0, total))       # last durable record
+        extra = int(rng.integers(1, RECORD_SIZE))  # torn bytes of k+1
+        dst = tmp_path / f"r{i}"
+        _crash_copy(str(src), str(dst), k, extra=extra)
+        obs = ObsSink(src="recover")
+        res = recover(str(dst), obs=obs)
+        # the torn record is detected, truncated, and NEVER applied
+        assert res.lsn == k, f"offset {extra} into record {k + 1}"
+        assert res.truncated_bytes == extra
+        assert _digest(res.policy) == hashes[k]
+        cuts = [e for e in obs.ring.records()
+                if e["kind"] == "journal_truncated"]
+        assert cuts and cuts[-1]["a"] == k and cuts[-1]["b"] == extra
+        # the file really was truncated: a second recovery is clean
+        res2 = recover(str(dst))
+        assert res2.lsn == k and res2.truncated_bytes == 0
+        shutil.rmtree(dst)
+
+
+def test_crash_fault_spec_kills_writer_mid_record(tmp_path):
+    """The in-process variant: a CRASH FaultSpec on the journal append
+    stream flushes a record prefix and raises JournalCrash."""
+    pol = _mk_policy()
+    plan = FaultPlan(7, [FaultSpec(CRASH, ops=(OP_JOURNAL_APPEND,),
+                                   at=(137,), ticks=17)])
+    jr = ShardJournal(str(tmp_path), segment_records=64, plan=plan)
+    jr.attach(pol)
+    hashes = {jr.lsn: _digest(pol)}
+    with pytest.raises(JournalCrash):
+        _drive(pol, each=lambda: hashes.__setitem__(jr.lsn, _digest(pol)))
+    with pytest.raises(ValueError):
+        jr.append(1)  # a crashed journal accepts nothing further
+    res = recover(str(tmp_path))
+    # op_seq 137 is the 138th append: 137 records durable, 17 torn bytes
+    assert res.lsn == 137 and res.truncated_bytes == 17
+    assert _digest(res.policy) == hashes[137]
+
+
+def test_crash_fault_full_record_is_durable(tmp_path):
+    """ticks >= RECORD_SIZE clamps to the whole record: it reached disk,
+    so recovery must apply it even though the writer died."""
+    pol = _mk_policy()
+    plan = FaultPlan(7, [FaultSpec(CRASH, ops=(OP_JOURNAL_APPEND,),
+                                   at=(99,), ticks=10_000)])
+    jr = ShardJournal(str(tmp_path), segment_records=64, plan=plan)
+    jr.attach(pol)
+    with pytest.raises(JournalCrash):
+        _drive(pol)
+    res = recover(str(tmp_path))
+    assert res.lsn == 100 and res.truncated_bytes == 0
+
+
+# =============================================================================
+# Apply idempotency + replay determinism (hypothesis w/ seeded fallback)
+# =============================================================================
+
+def check_idempotent_replay(seed: int) -> None:
+    """One sampled point: journal a run, then prove (a) applying any
+    prefix twice is a no-op, (b) a replica resuming mid-stream converges
+    to the same bytes as a one-shot catch-up, (c) two independent
+    replicas agree with the live shard bit-for-bit."""
+    rng = np.random.default_rng(seed)
+    pol = _mk_policy()
+    jr = ShardJournal(None, segment_records=int(rng.integers(16, 128)))
+    jr.attach(pol)
+    _drive(pol, n=120, seed=int(rng.integers(1, 1 << 62)))
+    want = pack(state_dict(pol))
+    recs = jr.records_since(0)
+    assert recs and recs[-1].lsn == jr.lsn
+
+    one_shot = ShardReplica(jr)
+    assert one_shot.catch_up() == len(recs)
+    assert pack(state_dict(one_shot.mirror)) == want
+
+    # prefix applied twice: the second pass is skipped record-for-record
+    cut = int(rng.integers(1, len(recs)))
+    twice = ShardReplica(jr)
+    assert twice.catch_up(upto=recs[cut - 1].lsn) == cut
+    mid = pack(state_dict(twice.mirror))
+    for r in recs[:cut]:
+        assert not twice.apply(r)  # idempotent: already applied
+    assert pack(state_dict(twice.mirror)) == mid
+    # ...and resuming mid-segment reaches the exact final state
+    assert twice.catch_up() == len(recs) - cut
+    assert pack(state_dict(twice.mirror)) == want
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+    def test_journal_apply_idempotent_fuzz(seed):
+        check_idempotent_replay(seed)
+else:
+    @pytest.mark.parametrize("seed", range(6))
+    def test_journal_apply_idempotent_fuzz(seed):
+        check_idempotent_replay(seed)
+
+
+def test_records_since_survives_tail_eviction():
+    """A replica that fell behind the bounded in-memory tail must be
+    served by re-decoding segments, not a truncated slice."""
+    pol = _mk_policy()
+    jr = ShardJournal(None, segment_records=32, tail_cap=8)
+    jr.attach(pol)
+    _drive(pol, n=100)
+    recs = jr.records_since(0)
+    assert [r.lsn for r in recs] == list(range(1, jr.lsn + 1))
+    rep = ShardReplica(jr)
+    rep.catch_up()
+    pol2 = _mk_policy()
+    assert pack(state_dict(rep.mirror)) == pack(state_dict(pol))
+
+
+def test_compaction_folds_sealed_segments(tmp_path):
+    pol = _mk_policy()
+    jr = ShardJournal(str(tmp_path), segment_records=32)
+    jr.attach(pol)
+    _drive(pol, n=150)
+    want = _digest(pol)
+    n_segs = len(glob.glob(str(tmp_path / "seg-*.c2qj")))
+    assert n_segs > 2  # rotation actually happened
+    folded = jr.compact()
+    assert folded > 0 and jr.base_lsn == jr.lsn - jr._seg_count
+    # sealed segments gone, exactly one base + the open segment remain
+    assert len(glob.glob(str(tmp_path / "seg-*.c2qj"))) == 1
+    assert len(glob.glob(str(tmp_path / "base-*.c2qsnap"))) == 1
+    jr.close()
+    res = recover(str(tmp_path))
+    assert res.lsn == jr.lsn and _digest(res.policy) == want
+
+
+# =============================================================================
+# Hot-standby promotion: exact state, epochs, events
+# =============================================================================
+
+def test_promote_restores_exact_shard_state():
+    svc = ShardedClock2QPlus(256, n_shards=4, max_capacity=512,
+                             obs=NullSink())
+    obs = ObsSink(src="replicator")
+    rep = ShardReplicator(svc, None, lag_threshold=1 << 30, obs=obs)
+    rng = np.random.default_rng(5)
+    for k in rng.integers(0, 600, 5000):
+        r = svc.access(int(k))
+        if not r.hit:
+            svc.io_done(int(k))
+    rep.poll()
+    # leave some lag on purpose: promote must drain it from the tail
+    for k in rng.integers(0, 600, 500):
+        r = svc.access(int(k))
+        if not r.hit:
+            svc.io_done(int(k))
+    lag = rep.lag(1)
+    assert lag > 0
+    want = pack(state_dict(svc.shards[1]))
+    old_epoch = rep.journals[1].epoch
+    res = rep.promote(1)
+    assert res.lag_at_loss == lag and res.replayed == lag
+    assert pack(state_dict(svc.shards[1])) == want  # bit-exact failover
+    # the shard's new incarnation journals under the next epoch
+    assert rep.journals[1].epoch == old_epoch + 1
+    assert rep.lag(1) == 0
+    ev = [e for e in obs.ring.records() if e["kind"] == "promote"]
+    assert ev and ev[-1]["shard"] == 1 and ev[-1]["b"] == lag
+    # the replication-lag gauge family is exported per shard
+    snap = obs.snapshot()
+    assert any(k.startswith("cache_replica_lag_lsn")
+               for k in snap.gauges)
+    # and the promoted shard keeps serving + journaling
+    for k in rng.integers(0, 600, 500):
+        r = svc.access(int(k))
+        if not r.hit:
+            svc.io_done(int(k))
+    rep.poll()
+    assert rep.lag(1) == 0
+
+
+def test_lag_threshold_gates_promotion():
+    svc = ShardedClock2QPlus(64, n_shards=2, max_capacity=128,
+                             obs=NullSink())
+    rep = ShardReplicator(svc, None, lag_threshold=8)
+    for k in range(32):
+        r = svc.access(k)
+        if not r.hit:
+            svc.io_done(k)
+    assert not rep.should_promote(0)  # way behind: rewarm instead
+    rep.poll()
+    assert rep.should_promote(0)
+    # reattach after a rewarm fallback resumes journaling at epoch+1
+    rep.reattach(0)
+    assert rep.journals[0].epoch == 1 and rep.lag(0) == 0
+
+
+# =============================================================================
+# Pool wiring: promote-on-loss replaces the cold rewarm
+# =============================================================================
+
+def test_pool_promotes_standby_on_shard_loss():
+    from repro.configs import get_config, reduced
+    from repro.kvcache.pool import BlockPool
+    from repro.faults import SHARD_LOSS
+
+    cfg = reduced(get_config("granite-3-8b"))
+    plan = FaultPlan(13, [FaultSpec(SHARD_LOSS, ops=("swap_out",),
+                                    at=(6,), shard=1)])
+    pool = BlockPool(cfg, 32, 8, n_shards=4, faults=plan, replicate=True,
+                     lag_threshold=1 << 30, replica_poll=64)
+    import jax.numpy as jnp
+    zeros = jnp.zeros((cfg.n_layers, pool.bs, cfg.n_kv_heads, cfg.hd))
+    rng = np.random.default_rng(2)
+    for k in rng.integers(0, 120, 1200):
+        slot, needs_fill = pool.lookup(int(k), pin=False)
+        if needs_fill:
+            pool.write_block(slot, zeros, zeros, key=int(k))
+    assert plan.injected > 0
+    ev = [e for e in pool.obs.ring.records() if e["kind"] == "promote"]
+    assert ev and ev[-1]["shard"] == 1  # standby promoted, not rewarmed
+    assert not any(e["kind"] == "shard_rewarm"
+                   for e in pool.obs.ring.records())
+    # staleness is bounded by the poll interval; a poll drains it fully
+    assert pool.replication_lag(1) <= pool.replica_poll
+    pool._replicator.poll()
+    assert pool.replication_lag(1) == 0
+
+
+# =============================================================================
+# Acceptance: post-failover miss parity, promote vs PR 8 cold rewarm
+# =============================================================================
+
+def _suite_trace(name, n):
+    import dataclasses
+    from repro.core.traces import SUITE
+    spec = next(s for s in SUITE if s.name == name)
+    return dataclasses.replace(spec, n=n).data()
+
+
+def _run_sharded(trace, lose_at=None, mode=None, chunk=2048):
+    """The PR 8 harness, with a third mode: 'promote' replicates via the
+    delta journal and promotes the standby at the loss point; 'rewarm'
+    is the ghost-journal cold path; None is the uninjured baseline."""
+    svc = ShardedClock2QPlus(2048, n_shards=4, max_capacity=4096,
+                             obs=NullSink())
+    rep = gj = None
+    if mode == "promote":
+        rep = ShardReplicator(svc, None, lag_threshold=1 << 30)
+    elif mode == "rewarm":
+        gj = GhostJournal()
+    hits = 0
+    done_loss = False
+    for lo in range(0, len(trace), chunk):
+        batch = trace[lo:lo + chunk]
+        hits += int(svc.access_many(batch).sum())
+        if gj is not None:
+            gj.capture(svc)
+        if rep is not None:
+            rep.poll()
+        if lose_at is not None and not done_loss and lo + chunk >= lose_at:
+            if mode == "promote":
+                rep.promote(1)
+            else:
+                failover(svc, 1, gj)
+            done_loss = True
+    return hits / len(trace)
+
+
+@pytest.mark.slow
+def test_promote_beats_cold_rewarm_miss_parity():
+    """Replica promotion restores the EXACT replacement state, so the
+    post-failover miss ratio matches the uninterrupted run to the bit
+    (gap 0) — at least as close as the ghost rewarm on every trace, and
+    strictly closer in aggregate."""
+    gaps_promote, gaps_rewarm = [], []
+    for name in ("w01-skewed", "w02-balanced", "w03-seqheavy"):
+        trace = _suite_trace(name, 48_000)
+        base = _run_sharded(trace)
+        mid = len(trace) // 2
+        gp = abs(base - _run_sharded(trace, mid, "promote"))
+        gr = abs(base - _run_sharded(trace, mid, "rewarm"))
+        assert gp == 0.0, f"{name}: promotion is not bit-exact (gap {gp})"
+        assert gp <= gr, f"{name}: promote gap {gp} worse than rewarm {gr}"
+        gaps_promote.append(gp)
+        gaps_rewarm.append(gr)
+    assert sum(gaps_promote) < sum(gaps_rewarm), \
+        "promotion must strictly beat the cold rewarm in aggregate"

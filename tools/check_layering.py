@@ -10,10 +10,15 @@ only point DOWNWARD or sideways within a package, never upward):
                              — every layer instruments, none leaks back)
     1  repro.core            reference zoo, prod cache, replay drivers
     2  repro.traceio         trace storage/streaming
-    2  repro.faults          fault injection & recovery (RESTRICTED:
-                             besides the usual downward rule it may
-                             import ONLY repro.core and repro.obs —
-                             never traceio sideways — so chaos machinery
+    2  repro.faults          fault injection & recovery, incl. the
+                             write-ahead delta journal (faults.journal)
+                             and hot-standby replication
+                             (faults.replica) (RESTRICTED: besides the
+                             usual downward rule it may import ONLY
+                             repro.core and repro.obs — never traceio
+                             sideways, and replica duck-types the
+                             sharded service rather than importing
+                             repro.shardcache — so chaos machinery
                              stays a leaf the layers above thread in)
     3  repro.tuning, repro.shardcache, repro.kvcache, repro.kernels
     4  repro.serving

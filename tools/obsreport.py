@@ -107,6 +107,11 @@ def _describe_incident(e: dict) -> str:
                f"{b} ghost-seeded"
     if kind == "restore":
         return f"restored snapshot step {a} ({b} resident entries)"
+    if kind == "journal_truncated":
+        return f"journal torn tail truncated at LSN {a} ({b} bytes cut)"
+    if kind == "promote":
+        return f"shard {shard} PROMOTED from standby ({a} journal " \
+               f"records replayed, lag {b} at loss)"
     if kind == "rebalance":
         return f"shard {shard} capacity retarget {a} -> {b}"
     if kind in ("resize", "resize_done"):
@@ -130,6 +135,15 @@ def render_incidents(snap: Snapshot, n_events: int = 200) -> str:
                    f"{_describe_incident(e)}")
     if not incidents:
         out.append("  (no incidents recorded)")
+    # replication health alongside the timeline: the per-shard standby
+    # lag gauges (repro.faults.replica) are what the promote-vs-rewarm
+    # decision reads, so an incident review needs them in view
+    lags = sorted(k for k in snap.gauges
+                  if k.startswith("cache_replica_lag_lsn"))
+    if lags:
+        out.append("  -- replication lag (journal records behind) --")
+        for k in lags:
+            out.append(f"    {k} = {snap.gauges[k]:g}")
     return "\n".join(out) + "\n"
 
 
